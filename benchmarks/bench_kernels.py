@@ -1,0 +1,58 @@
+"""Kernel-level A/B (paper Fig. 5, "implementation choices"): the XLA chunked
+path vs the Pallas kernel in interpret mode (numerical parity + call cost).
+
+interpret=True runs the kernel body in Python — its wall time is NOT TPU
+performance; the number that matters here is allclose parity and the block
+configuration that the TPU deployment will use (block_q=block_k=128).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.core import bias as bias_mod
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    b, n, h, kvh, d = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, n, h, d))
+    k = jax.random.normal(ks[1], (b, n, kvh, d))
+    v = jax.random.normal(ks[2], (b, n, kvh, d))
+    slopes = bias_mod.alibi_slopes(h)
+
+    xla_fn = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, slopes=slopes, mask_kind="causal", impl="xla"))
+    t_xla = time_fn(xla_fn, q, k, v)
+    rows.append(Row("fig5_xla_chunked_alibi", t_xla * 1e6,
+                    "training-path impl (paper: SDPA)"))
+
+    out_pallas = ops.flash_attention(q, k, v, slopes=slopes,
+                                     mask_kind="causal",
+                                     impl="pallas_interpret",
+                                     block_q=128, block_k=128)
+    err = float(jnp.abs(out_pallas - xla_fn(q, k, v)).max())
+    rows.append(Row("fig5_pallas_parity", 0.0,
+                    f"max_err={err:.2e} (blocks 128x128, TPU target)"))
+
+    # decode kernel parity at production block size
+    s = 512
+    kc = jax.random.normal(ks[1], (2, s, kvh, d))
+    vc = jax.random.normal(ks[2], (2, s, kvh, d))
+    q1 = jax.random.normal(ks[0], (2, 1, h, d))
+    lengths = jnp.array([317, 512], jnp.int32)
+    o_k = ops.flash_decode(q1, kc, vc, lengths, slopes=slopes,
+                           impl="pallas_interpret", block_k=128)
+    o_r = ref.decode_reference(q1, kc, vc, lengths, slopes=slopes)
+    rows.append(Row("decode_kernel_parity", 0.0,
+                    f"max_err={float(jnp.abs(o_k - o_r).max()):.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

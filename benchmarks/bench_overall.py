@@ -1,0 +1,85 @@
+"""Paper Fig. 3/4: overall efficiency — FlashBias vs FlashAttention-with-Bias
+vs pure FlashAttention, across sequence lengths, training and inference.
+
+Paths (CPU-relative A/B; see common.py):
+- ``pure``       — chunked flash attention, no bias (the paper's upper bound),
+- ``dense_bias`` — chunked flash attention streaming a dense (H,N,N) bias
+                   (the "FlashAttention w/ Bias" baseline; Theta(NM) bias IO),
+- ``flashbias``  — rank-R factors ride with q/k (Theta((N+M)R) bias IO).
+
+Memory column: bias-path bytes actually materialized (analytic, exact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.core.attention import MaskSpec, attention
+from repro.core import bias as bias_mod
+
+HEADS, DIM, RANK = 8, 64, 8
+
+
+def _setup(n, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    q = jax.random.normal(ks[0], (1, n, HEADS, DIM))
+    k = jax.random.normal(ks[1], (1, n, HEADS, DIM))
+    v = jax.random.normal(ks[2], (1, n, HEADS, DIM))
+    pq = jax.random.normal(ks[3], (1, n, HEADS, RANK)) * 0.1
+    pk = jax.random.normal(ks[4], (1, n, HEADS, RANK)) * 0.1
+    dense = jnp.einsum("bnhr,bmhr->bhnm", pq, pk)      # same bias, dense form
+    return q, k, v, pq, pk, dense
+
+
+def run(seqs=(256, 512, 1024), train=True):
+    rows = []
+    for n in seqs:
+        q, k, v, pq, pk, dense = _setup(n)
+        chunk = min(256, n)
+
+        pure = jax.jit(lambda q, k, v: attention(
+            q, k, v, impl="chunked", chunk_size=chunk))
+        with_dense = jax.jit(lambda q, k, v, b: attention(
+            q, k, v, bias=b, impl="chunked", chunk_size=chunk))
+        with_phi = jax.jit(lambda q, k, v, pq, pk: attention(
+            q, k, v, phi_q=pq, phi_k=pk, impl="chunked", chunk_size=chunk))
+
+        t_pure = time_fn(pure, q, k, v)
+        t_dense = time_fn(with_dense, q, k, v, dense)
+        t_phi = time_fn(with_phi, q, k, v, pq, pk)
+        bias_bytes_dense = dense.size * 4
+        bias_bytes_phi = (pq.size + pk.size) * 4
+        rows += [
+            Row(f"fig3_infer_pure_n{n}", t_pure * 1e6, "bias_bytes=0"),
+            Row(f"fig3_infer_densebias_n{n}", t_dense * 1e6,
+                f"bias_bytes={bias_bytes_dense}"),
+            Row(f"fig3_infer_flashbias_n{n}", t_phi * 1e6,
+                f"bias_bytes={bias_bytes_phi}; "
+                f"ratio_vs_pure={t_phi / t_pure:.3f}"),
+        ]
+        if train:
+            def loss_dense(q, b):
+                return with_dense(q, k, v, b).sum()
+
+            def loss_phi(q, pq):
+                return with_phi(q, k, v, pq, pk).sum()
+
+            g_dense = jax.jit(jax.grad(loss_dense))
+            g_phi = jax.jit(jax.grad(loss_phi))
+            t_gd = time_fn(g_dense, q, dense)
+            t_gp = time_fn(g_phi, q, pq)
+            rows += [
+                Row(f"fig3_train_densebias_n{n}", t_gd * 1e6,
+                    f"bias_grad_bytes={bias_bytes_dense}"),
+                Row(f"fig3_train_flashbias_n{n}", t_gp * 1e6,
+                    f"bias_grad_bytes={bias_bytes_phi}"),
+            ]
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

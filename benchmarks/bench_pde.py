@@ -1,0 +1,54 @@
+"""Paper Table 5 (Transformer PDE solver, learnable spatial-distance bias):
+training + inference across point counts; the dense path's bias memory grows
+O(N^2) (the paper's OOM column) while FlashBias stays O(N*R).
+
+The learnable alpha makes the dense path store an (H, N, N) gradient — we
+report the analytic bias/bias-grad bytes next to measured step times.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.configs import smoke_config
+from repro.data import PDEBatches
+from repro.models import get_model, pde as pde_mod
+from repro.models.common import init_params
+
+
+def run(sizes=(256, 1024, 2048)):
+    cfg = smoke_config("pde_solver").replace(n_layers=4)
+    model = get_model(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(0))
+    rows = []
+    for n in sizes:
+        data = PDEBatches(n_points=n, global_batch=1, seed=0)
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        h = cfg.n_heads
+        dense_bias_bytes = h * n * n * 4
+        fb_bytes = 2 * n * h * 9 * 4
+
+        for mode, tag in (("flashbias", "flashbias"), ("dense", "dense")):
+            c = cfg.replace(bias_mode=mode)
+            if mode == "dense" and n > 1024:
+                rows.append(Row(f"table5_train_{tag}_n{n}", float("nan"),
+                                f"bias_grad_bytes={dense_bias_bytes} "
+                                "(paper: OOM at scale)"))
+                continue
+            lf = jax.jit(lambda p, b, c=c: pde_mod.regression_loss(p, b, c))
+            gf = jax.jit(jax.grad(
+                lambda p, b, c=c: pde_mod.regression_loss(p, b, c)))
+            t_i = time_fn(lf, params, batch, iters=3)
+            t_t = time_fn(gf, params, batch, iters=3)
+            bb = dense_bias_bytes if mode == "dense" else fb_bytes
+            rows.append(Row(f"table5_infer_{tag}_n{n}", t_i * 1e6,
+                            f"bias_bytes={bb}"))
+            rows.append(Row(f"table5_train_{tag}_n{n}", t_t * 1e6,
+                            f"bias_grad_bytes={bb}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,42 @@
+"""Benchmark helpers.
+
+IMPORTANT (DESIGN.md §Changed assumptions): this container is CPU-only, so
+wall-clock numbers are *relative A/B comparisons* between execution paths of
+the same workload, NOT TPU performance. TPU performance is derived
+analytically in EXPERIMENTS.md §Roofline from the compiled dry-run.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "Row", "print_rows"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds of ``fn(*args)`` (block_until_ready'd)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.monotonic()
+        jax.block_until_ready(fn(*args))
+        times.append(time.monotonic() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Row:
+    def __init__(self, name: str, us_per_call: float, derived: str = ""):
+        self.name, self.us, self.derived = name, us_per_call, derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.1f},{self.derived}"
+
+
+def print_rows(rows):
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

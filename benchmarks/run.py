@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure:
+
+=====================  ==========================================
+module                 paper artifact
+=====================  ==========================================
+bench_overall          Fig. 3/4  (overall efficiency vs seq len)
+bench_alibi            Table 3   (GPT-2 + ALiBi, delta cost of bias)
+bench_svd_swin         Table 4 + Fig. 6/8/9 (SwinV2 SVD)
+bench_pde              Table 5   (PDE solver, learnable bias)
+bench_neural           Table 6 / Fig. 7 + App. G (neural decomp)
+bench_io_model         Thm 3.1/3.2, Cor 3.7, Ex. 3.9 (IO model)
+bench_kernels          Fig. 5    (implementation choices / parity)
+=====================  ==========================================
+
+CPU container: wall-clock values are relative A/B only; TPU numbers live in
+EXPERIMENTS.md §Roofline (from the compiled dry-run).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_alibi, bench_io_model, bench_kernels,
+                            bench_neural, bench_overall, bench_pde,
+                            bench_svd_swin)
+    from benchmarks.common import print_rows
+
+    modules = [bench_io_model, bench_overall, bench_alibi, bench_svd_swin,
+               bench_pde, bench_neural, bench_kernels]
+    rows = []
+    failed = []
+    for m in modules:
+        name = m.__name__.split(".")[-1]
+        print(f"# running {name} ...", file=sys.stderr)
+        try:
+            rows.extend(m.run())
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print_rows(rows)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

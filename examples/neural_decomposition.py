@@ -1,0 +1,52 @@
+"""Paper Table 1(c) + App. G: NEURAL decomposition of biases that have no
+closed-form factorization — gravity 1/d^2 and spherical (haversine) distance.
+
+Token-wise factor MLPs (3 linear layers + tanh, App. H Table 12) are trained
+with Eq. 5 to approximate f(x_q, x_k) ~= phi_q(x_q) phi_k(x_k)^T.
+
+    PYTHONPATH=src python examples/neural_decomposition.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decomp
+
+key = jax.random.PRNGKey(0)
+
+
+def gravity(xq, xk):
+    d2 = jnp.sum((xq[:, None] - xk[None]) ** 2, -1)
+    return 1.0 / (d2 + 0.01)          # paper adds 0.01 for stability
+
+
+def spherical(xq, xk):
+    lat1, lon1 = xq[:, None, 0], xq[:, None, 1]
+    lat2, lon2 = xk[None, :, 0], xk[None, :, 1]
+    h = (jnp.sin((lat1 - lat2) / 2) ** 2
+         + jnp.cos(lat1) * jnp.cos(lat2) * jnp.sin((lon1 - lon2) / 2) ** 2)
+    return 2 * jnp.arcsin(jnp.sqrt(jnp.clip(h, 0.0, 1.0)))
+
+
+for name, fn, lo, hi in (("gravity", gravity, 0.0, 1.0),
+                         ("spherical", spherical, -1.5, 1.5)):
+    params = decomp.neural_decomp_init(key, 2, 2, hidden=64, heads=1, rank=32)
+
+    def sample(k, fn=fn, lo=lo, hi=hi):
+        xq = jax.random.uniform(k, (64, 2), minval=lo, maxval=hi)
+        return xq, xq, fn(xq, xq)[None]
+
+    fitted, losses = decomp.fit_neural_decomposition(
+        key, params, sample, steps=400, lr=3e-3)
+    xq, xk, target = sample(jax.random.PRNGKey(99))
+    pred = decomp.predicted_bias(fitted, xq, xk)[0]
+    rel = float(jnp.linalg.norm(pred - target[0])
+                / jnp.linalg.norm(target[0]))
+    print(f"{name:10s} bias: Eq.5 loss {float(losses[0]):.4f} -> "
+          f"{float(losses[-1]):.4f}; held-out rel err {rel:.3f} (R=32)")
+print("(the fitted factors then ride with q/k exactly like the exact "
+      "decompositions — see examples/quickstart.py)")

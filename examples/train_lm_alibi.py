@@ -1,0 +1,85 @@
+"""End-to-end driver: train a GPT-2-family LM with FlashBias-ALiBi.
+
+    PYTHONPATH=src python examples/train_lm_alibi.py            # ~10M demo
+    PYTHONPATH=src python examples/train_lm_alibi.py --full     # ~100M model
+
+The paper's Sec. 4.2 setting: decoder-only, causal mask + ALiBi, the bias
+consumed through the exact rank-2 decomposition (identical losses to dense
+ALiBi — verified at step 0). Fault-tolerant loop: checkpoints land in
+--ckpt-dir and a rerun resumes from the last one.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.gpt2_alibi_15b import CONFIG
+from repro.data import LMBatches
+from repro.models import get_model
+from repro.models.common import count_params, init_params
+from repro.optim import AdamW, cosine
+from repro.train import TrainLoop, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/flashbias_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.full:   # ~100M: 12 layers x 768, vocab 50257
+        cfg = CONFIG.replace(n_layers=12, d_model=768, n_heads=12,
+                             n_kv_heads=12, d_ff=3072, head_dim=64,
+                             tp=1, remat="none", dtype="float32",
+                             grad_accum=1)
+    else:           # ~10M demo
+        cfg = CONFIG.replace(n_layers=6, d_model=256, n_heads=8,
+                             n_kv_heads=8, d_ff=1024, head_dim=32,
+                             vocab=8192, tp=1, remat="none",
+                             dtype="float32", grad_accum=1)
+
+    model = get_model(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(0))
+    n_params = count_params(model.template())
+    print(f"model: {cfg.name} derivative, {n_params / 1e6:.1f}M params, "
+          f"FlashBias-ALiBi (exact R=2)")
+
+    # sanity: FlashBias loss == dense-ALiBi loss at init (exact decomposition)
+    data = LMBatches(vocab=cfg.vocab, seq_len=args.seq,
+                     global_batch=args.batch, seed=0)
+    b0 = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    l_fb = model.loss(params, b0)
+    l_dense = get_model(cfg.replace(bias_mode="dense")).loss(params, b0)
+    print(f"exactness check: flashbias loss {float(l_fb):.5f} == "
+          f"dense-bias loss {float(l_dense):.5f} "
+          f"(delta {abs(float(l_fb) - float(l_dense)):.2e})")
+
+    opt = AdamW(lr_fn=cosine(3e-3, args.steps // 10, args.steps))
+    step = make_train_step(model.loss, opt)
+    loop = TrainLoop(step, lambda s: {k: jnp.asarray(v)
+                                      for k, v in data.batch(s).items()},
+                     ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                     log_path=os.path.join(args.ckpt_dir, "log.jsonl"))
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    params, opt_state, info = loop.run(params, opt.init(params), args.steps)
+    print("run info:", info)
+
+    import json
+    with open(os.path.join(args.ckpt_dir, "log.jsonl")) as f:
+        losses = [json.loads(line)["loss"] for line in f]
+    if losses:
+        k = max(1, len(losses) // 10)
+        print(f"loss: first-{k} avg {sum(losses[:k]) / k:.4f} -> "
+              f"last-{k} avg {sum(losses[-k:]) / k:.4f}")
+
+
+if __name__ == "__main__":
+    main()

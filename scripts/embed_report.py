@@ -1,0 +1,50 @@
+"""Embed the generated roofline report into EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python scripts/embed_report.py
+"""
+import re
+import subprocess
+import sys
+
+rep = subprocess.run(
+    [sys.executable, "-m", "repro.analysis.report", "results/dryrun"],
+    capture_output=True, text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/nix/store"},
+).stdout
+
+try:
+    base = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.report", "results/dryrun_baseline"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/nix/store"},
+    ).stdout
+except Exception:
+    base = ""
+
+sections = re.split(r"^## ", rep, flags=re.M)
+tables = {}
+for sec in sections:
+    if sec.startswith("Roofline"):
+        tables["roofline"] = "## " + sec.strip()
+    elif sec.startswith("Multi-pod"):
+        tables["multipod"] = "## " + sec.strip()
+    elif sec.startswith("Collective"):
+        tables["coll"] = "## " + sec.strip()
+
+base_roof = ""
+for sec in re.split(r"^## ", base, flags=re.M):
+    if sec.startswith("Roofline"):
+        base_roof = sec.strip().split("\n", 1)[1]
+
+with open("EXPERIMENTS.md") as f:
+    doc = f.read()
+
+dry = (tables.get("multipod", "") + "\n\n" + tables.get("coll", ""))
+roof = (tables.get("roofline", "")
+        + "\n\n### Paper-faithful baseline (pre-§Perf fixes, archived in "
+        "results/dryrun_baseline/)\n\n" + base_roof)
+
+doc = doc.replace("<!-- DRYRUN_TABLES -->", dry)
+doc = doc.replace("<!-- ROOFLINE_TABLE -->", roof)
+with open("EXPERIMENTS.md", "w") as f:
+    f.write(doc)
+print("embedded", {k: len(v) for k, v in tables.items()})

@@ -1,0 +1,98 @@
+"""Turn results/dryrun/*.json into the EXPERIMENTS.md §Roofline tables.
+
+    PYTHONPATH=src python -m repro.analysis.report results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(d):
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(reports):
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful ratio | roofline frac | mem(xla) | temp/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(reports, key=lambda r: (r["arch_id"], r["shape"])):
+        if r["mesh"] != "single" or "compute_s" not in r:
+            continue
+        mem = (r.get("memory") or {}).get("temp_bytes")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction'] * 100:.1f}% | "
+            f"{fmt_s(r.get('memory_s_xla'))} | {fmt_b(mem)} |")
+    return "\n".join(rows)
+
+
+def multipod_table(reports):
+    rows = ["| arch | shape | mesh | compile | peak mem/dev | status |",
+            "|---|---|---|---|---|---|"]
+    for r in sorted(reports, key=lambda r: (r["arch_id"], r["shape"],
+                                            r["mesh"])):
+        if r["mesh"] != "multi":
+            continue
+        mem = (r.get("memory") or {}).get("peak_bytes")
+        rows.append(f"| {r['arch']} | {r['shape']} | 2x16x16 | "
+                    f"{r['compile_s']:.1f}s | {fmt_b(mem)} | "
+                    f"{'OK' if r.get('compile_ok') else '?'} |")
+    return "\n".join(rows)
+
+
+def collective_breakdown(reports, top=6):
+    rows = ["| arch | shape | all-gather | all-reduce | reduce-scatter | "
+            "all-to-all | permute |", "|---|---|---|---|---|---|---|"]
+    sel = [r for r in reports if r["mesh"] == "single" and "collective_detail" in r]
+    sel.sort(key=lambda r: -r.get("collective_s", 0))
+    for r in sel[:top]:
+        d = r["collective_detail"]
+        rows.append(f"| {r['arch']} | {r['shape']} | {fmt_b(d['all-gather'])} "
+                    f"| {fmt_b(d['all-reduce'])} | {fmt_b(d['reduce-scatter'])} "
+                    f"| {fmt_b(d['all-to-all'])} | "
+                    f"{fmt_b(d['collective-permute'])} |")
+    return "\n".join(rows)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    reports = load(d)
+    print("## Roofline (single pod, 16x16 = 256 chips)\n")
+    print(roofline_table(reports))
+    print("\n## Multi-pod compile proof (2x16x16 = 512 chips)\n")
+    print(multipod_table(reports))
+    print("\n## Collective breakdown (most collective-bound cells)\n")
+    print(collective_breakdown(reports))
+
+
+if __name__ == "__main__":
+    main()

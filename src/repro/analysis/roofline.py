@@ -1,0 +1,271 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Per (arch x shape x mesh) cell we derive three times-if-perfectly-overlapped:
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory_s     = HLO_bytes_per_device / HBM_bandwidth
+    collective_s = collective_operand_bytes_per_device / ICI_link_bandwidth
+
+``compiled.cost_analysis()`` provides FLOPs and bytes of the *partitioned*
+(per-device) module. Collective bytes are NOT in cost_analysis — we parse the
+optimized HLO text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (incl. async -start forms).
+
+The dominant term is the bottleneck the §Perf loop iterates on.
+``MODEL_FLOPS`` (6·N_active·tokens for training, 2·N_active·tokens for
+inference; unpadded parameter counts, attention excluded per MFU convention)
+over HLO_FLOPs exposes padding/remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.hw import TPU_V5E
+
+__all__ = ["collective_bytes", "roofline_report", "active_params",
+           "model_flops", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:                      # iota list: [num_groups, group_size]<=[...]
+        return max(int(m.group(2)), 1)
+    m = _LIST_GROUPS_RE.search(line)
+    if m:                      # explicit list: size of the first group
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
+    """Ring-algorithm bytes on the wire per device.
+
+    all-gather:   each device receives (g-1)/g of the full result.
+    all-reduce:   reduce-scatter + all-gather -> 2 x (g-1)/g x result.
+    reduce-scatter: operand is g x result; (g-1)/g of it crosses the wire.
+    all-to-all:   (g-1)/g of the buffer changes device.
+    collective-permute: the whole buffer moves.
+    """
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if op == "all-gather":
+        return f * result_bytes
+    if op == "all-reduce":
+        return 2.0 * f * result_bytes
+    if op == "reduce-scatter":
+        return f * result_bytes * g
+    if op == "all-to-all":
+        return f * result_bytes
+    return float(result_bytes)          # collective-permute
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> dict:
+    """Per-device collective wire bytes parsed from optimized HLO text.
+
+    Optimized HLO writes operands as bare refs (``all-reduce(%dot.1)``), so
+    sizes come from the *result* type (tuple types: sum of parts), converted
+    to wire bytes by the ring model above. Async ``-start`` forms count;
+    their ``-done`` twins are skipped. Returns {op: bytes, ..., "total": B,
+    "counts": {op: n}}.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done.(" in line:
+            continue
+        hit = None
+        for op in _COLLECTIVES:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                hit = op
+                break
+        if hit is None:
+            continue
+        eq = line.find(" = ")
+        opidx = line.find(f" {hit}")
+        if eq < 0 or opidx <= eq:
+            continue
+        result_sec = line[eq + 3:opidx]
+        rb = sum(_shape_bytes(m.group(1), m.group(2))
+                 for m in _SHAPE_RE.finditer(result_sec))
+        if f" {hit}-start(" in line:
+            # tuple (operand, result): count the result half only
+            rb = rb / 2
+        g = _group_size(line, default_group)
+        out[hit] += _wire_bytes(hit, rb, g)
+        counts[hit] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful work) from the *unpadded* architecture figures
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: ArchConfig) -> int:
+    """Per-token-active matmul parameters, REAL (unpadded) figures."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, (cfg.n_kv_heads or cfg.n_heads)
+    per_layer = 0
+    if cfg.family in ("dense", "moe", "hybrid"):
+        per_layer += d * hd * (2 * h + 2 * kv)              # wq, wo, wk, wv
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * d
+        per_layer += d * (2 * d_in + 2 * cfg.ssm_state + cfg.ssm_heads)
+        per_layer += d_in * d
+    if cfg.family == "moe":
+        per_layer += cfg.top_k * 3 * d * cfg.d_ff + d * cfg.n_experts
+    elif cfg.d_ff:
+        per_layer += 3 * d * cfg.d_ff
+    unembed = d * cfg.vocab
+    return cfg.n_layers * per_layer + unembed
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6·N_active·tokens (train) or 2·N_active·tokens (prefill/decode)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch        # decode: one token per request
+
+
+def attention_kv_reread_bytes(cfg: ArchConfig, shape: ShapeSpec,
+                              n_data: int, *, block: int = 128) -> float:
+    """Extra per-device HBM bytes of the Pallas flash kernel beyond
+    read-once (the io_stub's footprint): each allowed (q-block, kv-block)
+    tile pair re-reads the K/V tiles — the Theta(NM(C+R)^2/S) term of the
+    paper's Cor. 3.7, instantiated for our 128x128 tiling.
+
+    KV heads are replicated over the model axis (DESIGN §4), so every device
+    reads its batch shard's full KV. Causal masks allow ~1/2 of pairs;
+    sliding windows ~(window + 2*block)/N; decode reads the cache once (no
+    reread). Train charges fwd + backward (~2x fwd IO).
+    """
+    if cfg.family not in ("dense", "moe", "hybrid") or shape.kind == "decode":
+        return 0.0
+    n = shape.seq_len
+    b_loc = max(1, shape.global_batch // n_data)
+    if cfg.window:
+        frac = min(1.0, (cfg.window + 2 * block) / n)
+    else:
+        frac = 0.5
+    rereads = frac * (n / block)
+    kv_bytes = (n * cfg.kv_heads_padded * cfg.resolved_head_dim
+                * 2 * 2)                     # k+v, bf16
+    extra_per_layer = max(0.0, rereads - 1.0) * kv_bytes * b_loc
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd + ~2x bwd
+    if shape.kind == "train":
+        mult *= 1.0                                # grad-accum already in b_loc
+    return extra_per_layer * cfg.n_layers * mult
+
+
+def attention_kernel_flops(cfg: ArchConfig, shape: ShapeSpec,
+                           n_data: int, n_model: int,
+                           *, block: int = 128) -> float:
+    """Per-device FLOPs of the Pallas flash kernel (block-pruned masks).
+
+    The XLA fallback computes the FULL N x M logits and masks with
+    ``where`` — 2x waste for causal, ~N/window x for sliding windows. The
+    kernel skips disallowed blocks (``pl.when``), so deployment FLOPs are
+    ``mask_frac * (2*hd[qk] + 2*hd[pv] + 2*r[bias-tile]) * B*H*N*M``.
+    """
+    if cfg.family not in ("dense", "moe", "hybrid") or shape.kind == "decode":
+        return 0.0
+    n = shape.seq_len
+    b_loc = max(1, shape.global_batch // n_data)
+    h_loc = max(1, cfg.heads_padded // n_model)
+    if cfg.window:
+        frac = min(1.0, (cfg.window + 2 * block) / n)
+    else:
+        frac = 0.5
+    r = 2 if cfg.bias_kind == "alibi" else 0
+    hd = cfg.resolved_head_dim
+    per_pair = 2 * hd + 2 * hd + 2 * r
+    fwd = frac * b_loc * h_loc * n * n * per_pair
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return fwd * cfg.n_layers * mult
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+def roofline_report(*, flops_per_device: float, bytes_per_device: float,
+                    coll_bytes_per_device: float, cfg: ArchConfig,
+                    shape: ShapeSpec, n_devices: int,
+                    coll_detail: Optional[dict] = None,
+                    adjusted_bytes_per_device: Optional[float] = None,
+                    adjusted_flops_per_device: Optional[float] = None) -> dict:
+    """``adjusted_*_per_device``: the DEPLOYMENT path — the Pallas kernels'
+    true HBM footprint (VMEM-resident softmax, in-place cache update, Cor 3.7
+    KV rereads) and block-pruned attention FLOPs substituted for the XLA
+    fallback's full-quadratic numbers. When present, the dominant term and
+    roofline fraction use the adjusted terms; raw XLA numbers are reported
+    alongside."""
+    hw = TPU_V5E
+    compute_s_xla = flops_per_device / hw.peak_flops_bf16
+    memory_s = bytes_per_device / hw.hbm_bandwidth
+    collective_s = coll_bytes_per_device / hw.ici_link_bandwidth
+    memory_s_adj = (adjusted_bytes_per_device / hw.hbm_bandwidth
+                    if adjusted_bytes_per_device is not None else None)
+    compute_s_adj = (adjusted_flops_per_device / hw.peak_flops_bf16
+                     if adjusted_flops_per_device is not None else None)
+    eff_memory = memory_s_adj if memory_s_adj is not None else memory_s
+    eff_compute = compute_s_adj if compute_s_adj is not None else compute_s_xla
+    terms = {"compute_s": eff_compute, "memory_s": eff_memory,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_per_device = mf / n_devices
+    total = max(terms.values())
+    eff_flops = (adjusted_flops_per_device
+                 if adjusted_flops_per_device is not None
+                 else flops_per_device)
+    return {
+        "arch": cfg.name, "shape": shape.name, "devices": n_devices,
+        "compute_s": eff_compute, "compute_s_xla": compute_s_xla,
+        "memory_s": eff_memory,
+        "memory_s_xla": memory_s, "memory_s_adjusted": memory_s_adj,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "hlo_flops_per_device": flops_per_device,
+        "adjusted_flops_per_device": adjusted_flops_per_device,
+        "hlo_bytes_per_device": bytes_per_device,
+        "adjusted_bytes_per_device": adjusted_bytes_per_device,
+        "collective_bytes_per_device": coll_bytes_per_device,
+        "collective_detail": coll_detail or {},
+        "model_flops_total": mf,
+        "model_flops_per_device": mf_per_device,
+        "useful_flops_ratio": (mf_per_device / eff_flops
+                               if eff_flops else 0.0),
+        # fraction of compute-roofline achieved if the dominant term were the
+        # exact step time (the score §Perf drives up):
+        "roofline_fraction": ((mf_per_device / hw.peak_flops_bf16) / total
+                              if total else 0.0),
+    }

@@ -1,0 +1,33 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+
+24L d_model=768 (attn-free) d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified]. d_inner = 2*768 = 1536, headdim 64 ->
+24 SSM heads, padded to 32 for TP=16; vocab pads 50280 -> 50288.
+
+FlashBias is INAPPLICABLE here (no q k^T logits to bias) — implemented
+without the technique per DESIGN.md §Arch-applicability; the SSD decay
+mask L is itself the low-rank-structured attention surrogate.
+``long_500k`` RUNS: decode state is constant-size.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    bias_kind="none",
+    grad_accum=4,
+    notes="attention-free; FlashBias N/A (documented); SSD chunked scan",
+)
+
+SMOKE = CONFIG.replace(
+    grad_accum=1,
+    n_layers=2, d_model=64, vocab=128, ssm_state=16, ssm_head_dim=16,
+    tp=1, remat="none", dtype="float32",
+)

@@ -1,0 +1,28 @@
+"""minicpm-2b [dense] — llama-like, trained with a WSD schedule.
+
+40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753 [arXiv:2404.06395; hf].
+The WSD (warmup-stable-decay) schedule lives in repro.optim.schedules and is
+selected by this config. Heads pad 36 -> 48; vocab pads 122753 -> 122768.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab=122753,
+    bias_kind="alibi",
+    remat="full",  # dots remat stores >16GB temps at this batch (§Perf)
+    grad_accum=4,
+    notes="WSD schedule (optim); arch is llama-like MHA",
+)
+
+SMOKE = CONFIG.replace(
+    grad_accum=1,
+    n_layers=2, d_model=72, n_heads=6, n_kv_heads=6, d_ff=144, vocab=160,
+    tp=1, remat="none", dtype="float32",
+)

@@ -1,0 +1,30 @@
+"""FlashBias core: the paper's contribution as composable JAX modules.
+
+- ``bias``: bias taxonomy + exact low-rank factorizations (ALiBi, spatial
+  distance, multiplicative cos) — Table 1 row (a).
+- ``decomp``: SVD factors for learnable tables and neural token-wise factor
+  MLPs (Eq. 5) — Table 1 rows (b), (c).
+- ``attention``: dense / chunked(flash-style) / FlashBias execution paths
+  (Eq. 3), masks computed from iota, GQA, multiplicative extension (App. I).
+- ``lowrank``: singular-energy tooling + the paper's HBM IO model
+  (Thms 3.1/3.2, Cors 3.3/3.7).
+
+NOTE: submodules are imported *as modules* here; the ``attention`` callable
+lives at ``repro.core.attention.attention`` (and is re-exported as
+``attention_fn``) to avoid shadowing the submodule name.
+"""
+from repro.core import attention, bias, decomp, lowrank  # noqa: F401 (modules)
+from repro.core.attention import (MaskSpec, flashbias_concat_qk,
+                                  multiplicative_flashbias_attention)
+from repro.core.attention import attention as attention_fn
+from repro.core.bias import (BiasSpec, alibi_dense, alibi_factors,
+                             alibi_slopes)
+from repro.core.lowrank import IOModel, energy_profile, rank_for_energy
+
+__all__ = [
+    "attention", "bias", "decomp", "lowrank",
+    "MaskSpec", "attention_fn", "flashbias_concat_qk",
+    "multiplicative_flashbias_attention", "BiasSpec", "alibi_factors",
+    "alibi_dense", "alibi_slopes", "IOModel", "energy_profile",
+    "rank_for_energy",
+]

@@ -1,0 +1,300 @@
+"""Attention with bias: reference, FlashAttention-style chunked, and FlashBias.
+
+The three execution paths implement the paper's comparison matrix:
+
+==================  ==========================  =================================
+path                bias handling               corresponds to (paper)
+==================  ==========================  =================================
+``impl="dense"``    adds a materialized N x M   "standard attention" baseline
+``impl="chunked"``  streams dense bias blocks   "FlashAttention with Bias"
+  + ``bias=...``    (NM bytes of HBM traffic)
+``impl="chunked"``  rank-R factors ride with    **FlashBias** (Eq. 3): bias IO
+  + ``phi_*=...``   q/k, two MXU calls/tile     drops from Theta(NM) to
+                                                Theta((N+M)R)
+==================  ==========================  =================================
+
+The Pallas TPU kernels in ``repro.kernels`` are drop-in replacements for the
+chunked path on real hardware; the chunked path here is pure ``jax.lax`` so it
+lowers on any backend (and is what the multi-pod dry-run compiles).
+
+Layouts (MaxText convention): q ``(B, N, H, D)``; k, v ``(B, M, K, D)`` with
+``H % K == 0`` (GQA); factors ``phi_q (B, N, H, R)``, ``phi_k (B, M, H|1, R)``;
+dense bias ``(B|1, H, N, M)``.
+
+Masks are *computed* from positions (iota), never read from memory — the TPU
+analogue of the paper's "orthogonal to mask speedup" claim (Sec. 4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import flags
+
+DEFAULT_MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
+
+__all__ = [
+    "MaskSpec", "attention", "flashbias_concat_qk",
+    "multiplicative_flashbias_attention", "DEFAULT_MASK_VALUE",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    """kind: "none" | "causal" | "local" (causal sliding window of ``window``)."""
+    kind: str = "none"
+    window: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("none", "causal", "local")
+        if self.kind == "local":
+            assert self.window > 0
+
+    def block_mask(self, q_pos: jax.Array, k_pos: jax.Array) -> Optional[jax.Array]:
+        """Boolean allowed-matrix for positions; None means all-allowed.
+
+        q_pos: (..., N) absolute query positions, k_pos: (M,) key positions.
+        Returns (..., N, M) bool or None.
+        """
+        if self.kind == "none":
+            return None
+        diff = q_pos[..., :, None] - k_pos[..., None, :]  # i - j
+        allowed = diff >= 0
+        if self.kind == "local":
+            allowed &= diff < self.window
+        return allowed
+
+
+def _split_gqa(x: jax.Array, kv_heads: int) -> jax.Array:
+    """(B, S, H, E) -> (B, S, K, G, E) grouping q-heads under their kv head."""
+    b, s, h, e = x.shape
+    if h == kv_heads:
+        return x[:, :, :, None, :]
+    if h == 1:
+        return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv_heads, 1, e))
+    assert h % kv_heads == 0, (h, kv_heads)
+    return x.reshape(b, s, kv_heads, h // kv_heads, e)
+
+
+def _normalize_q_offset(q_offset, batch: int):
+    q_offset = jnp.asarray(q_offset)
+    if q_offset.ndim == 0:
+        q_offset = jnp.broadcast_to(q_offset, (batch,))
+    return q_offset  # (B,)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mask: MaskSpec = MaskSpec("none"),
+    scale: Optional[float] = None,
+    bias: Optional[jax.Array] = None,
+    phi_q: Optional[jax.Array] = None,
+    phi_k: Optional[jax.Array] = None,
+    q_offset: Union[int, jax.Array] = 0,
+    kv_length: Optional[Union[int, jax.Array]] = None,
+    impl: str = "chunked",
+    chunk_size: int = 512,
+) -> jax.Array:
+    """Scaled-dot-product attention with additive bias (dense or factored).
+
+    ``softmax(q k^T * scale + b + mask) v`` with ``b`` either ``bias`` (dense)
+    or ``phi_q @ phi_k^T`` (FlashBias factors) or both (low-rank + residual).
+
+    q_offset: absolute position of q[:, 0] (scalar or (B,)) — drives causal/
+    local masking for decode steps. kv_length: number of valid cache entries
+    (scalar or (B,)); keys at positions >= kv_length are masked out.
+    """
+    assert impl in ("dense", "chunked")
+    b, n, h, d = q.shape
+    _, m, kvh, _ = k.shape
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    if phi_q is not None:
+        assert phi_k is not None and phi_q.shape[-1] == phi_k.shape[-1]
+
+    if impl == "dense" or m <= chunk_size:
+        return _attention_dense(q, k, v, mask=mask, scale=scale, bias=bias,
+                                phi_q=phi_q, phi_k=phi_k, q_offset=q_offset,
+                                kv_length=kv_length)
+    return _attention_chunked(q, k, v, mask=mask, scale=scale, bias=bias,
+                              phi_q=phi_q, phi_k=phi_k, q_offset=q_offset,
+                              kv_length=kv_length, chunk_size=chunk_size)
+
+
+def _logits_block(q5, k_blk, phi_q5, phi_k_blk, scale, mask, q_pos, k_pos,
+                  bias_blk, kv_length):
+    """Pre-softmax logits for one kv block, fp32.
+
+    q5: (B, N, K, G, D); k_blk: (B, Mc, K, D); phi_q5: (B, N, K, G, R);
+    phi_k_blk: (B, Mc, K|1... broadcast to (B, Mc, K, G, R)); returns
+    (B, K, G, N, Mc).
+    """
+    s = jnp.einsum("bnkgd,bmkd->bkgnm", q5, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    if phi_q5 is not None:
+        s_bias = jnp.einsum("bnkgr,bmkgr->bkgnm", phi_q5, phi_k_blk,
+                            preferred_element_type=jnp.float32)
+        s = s + s_bias
+    if bias_blk is not None:
+        # bias_blk: (B|1, H, N, Mc) -> (B|1, K, G, N, Mc)
+        bb, hh, nn, mm = bias_blk.shape
+        k_, g_ = q5.shape[2], q5.shape[3]
+        s = s + bias_blk.reshape(bb, k_, g_, nn, mm).astype(jnp.float32)
+    allowed = mask.block_mask(q_pos, k_pos)  # (B, N, Mc) or None
+    if kv_length is not None:
+        in_range = k_pos[None, :] < jnp.asarray(kv_length).reshape(-1, 1)  # (B, Mc)
+        in_range = jnp.broadcast_to(in_range[:, None, :], (s.shape[0], q_pos.shape[-1], k_pos.shape[0]))
+        allowed = in_range if allowed is None else (allowed & in_range)
+    if allowed is not None:
+        s = jnp.where(allowed[:, None, None, :, :], s, DEFAULT_MASK_VALUE)
+    return s
+
+
+def _attention_dense(q, k, v, *, mask, scale, bias, phi_q, phi_k, q_offset,
+                     kv_length):
+    b, n, h, d = q.shape
+    _, m, kvh, _ = k.shape
+    q5 = _split_gqa(q, kvh)
+    phi_q5 = phi_k5 = None
+    if phi_q is not None:
+        phi_q5 = _split_gqa(phi_q, kvh)
+        phi_k5 = _split_gqa(jnp.broadcast_to(
+            phi_k, (b, m, h, phi_k.shape[-1])), kvh)
+    q_pos = jnp.arange(n)[None, :] + _normalize_q_offset(q_offset, b)[:, None]
+    k_pos = jnp.arange(m)
+    bias4 = None
+    if bias is not None:
+        bias4 = bias if bias.ndim == 4 else bias[None]
+    s = _logits_block(q5, k, phi_q5, phi_k5, scale, mask, q_pos, k_pos,
+                      bias4, kv_length)                      # (B,K,G,N,M)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgnm,bmkd->bnkgd", p.astype(v.dtype), v)
+    return o.reshape(b, n, h, v.shape[-1])
+
+
+def _attention_chunked(q, k, v, *, mask, scale, bias, phi_q, phi_k, q_offset,
+                       kv_length, chunk_size):
+    """Online-softmax scan over KV chunks; never materializes (N, M)."""
+    b, n, h, d = q.shape
+    _, m, kvh, _ = k.shape
+    dv = v.shape[-1]
+    r = 0 if phi_q is None else phi_q.shape[-1]
+    num_chunks = -(-m // chunk_size)
+    m_pad = num_chunks * chunk_size
+    pad = m_pad - m
+
+    def pad_kv(x):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else x
+
+    k_p, v_p = pad_kv(k), pad_kv(v)
+    # Padded keys must be masked: clamp kv_length to the true m.
+    kv_length = m if (kv_length is None and pad) else kv_length
+
+    q5 = _split_gqa(q, kvh)                                  # (B,N,K,G,D)
+    g = q5.shape[3]
+    phi_q5 = None
+    if phi_q is not None:
+        phi_q5 = _split_gqa(phi_q, kvh)
+        phi_k_b = pad_kv(jnp.broadcast_to(phi_k, (b, m, h, r)))
+        phi_k_c = phi_k_b.reshape(b, num_chunks, chunk_size, kvh, g, r)
+    k_c = k_p.reshape(b, num_chunks, chunk_size, kvh, d)
+    v_c = v_p.reshape(b, num_chunks, chunk_size, kvh, d)
+    bias_c = None
+    if bias is not None:
+        bias4 = bias if bias.ndim == 4 else bias[None]
+        bias4 = jnp.pad(bias4, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad else bias4
+        bias_c = bias4.reshape(bias4.shape[0], h, n, num_chunks, chunk_size)
+
+    q_pos = jnp.arange(n)[None, :] + _normalize_q_offset(q_offset, b)[:, None]
+
+    def body(carry, idx):
+        m_i, l_i, acc = carry
+        k_blk = jax.lax.dynamic_index_in_dim(k_c, idx, 1, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(v_c, idx, 1, keepdims=False)
+        phi_k_blk = (jax.lax.dynamic_index_in_dim(phi_k_c, idx, 1, keepdims=False)
+                     if phi_q5 is not None else None)
+        bias_blk = (jax.lax.dynamic_index_in_dim(bias_c, idx, 3, keepdims=False)
+                    if bias_c is not None else None)
+        k_pos = idx * chunk_size + jnp.arange(chunk_size)
+        s = _logits_block(q5, k_blk, phi_q5, phi_k_blk, scale, mask, q_pos,
+                          k_pos, bias_blk, kv_length)        # (B,K,G,N,Mc)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        corr = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgnm,bmkd->bkgnd", p.astype(v.dtype), v_blk)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, g, n), -jnp.inf, dtype=jnp.float32)
+    # Start from chunk 0 computed eagerly so the -inf init never meets exp():
+    # exp(-inf - m_new) with finite m_new is exactly 0, which is safe, but an
+    # all-masked first chunk would yield m_new = MASK_VALUE (finite) and the
+    # math stays well-defined.
+    l0 = jnp.zeros((b, kvh, g, n), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, n, dv), dtype=jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                      jnp.arange(num_chunks),
+                                      unroll=flags.scan_unroll(num_chunks))
+    l_safe = jnp.where(l_f == 0, 1.0, l_f)
+    o = acc / l_safe[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, n, h, dv)      # (B,N,K,G,D)->(B,N,H,D)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3 literal form — concat channels (used to verify the paper's identity)
+# ---------------------------------------------------------------------------
+
+def flashbias_concat_qk(q, k, phi_q, phi_k, scale: Optional[float] = None):
+    """Return (q', k') per Eq. 3: softmax(q'k'^T * scale) == softmax(qk^T*scale + b).
+
+    q' = [q | phi_q / scale], k' = [k | phi_k]. The factors are folded so the
+    *single* scale multiplies both terms correctly.
+
+    GQA note: k carries ``Hk <= H`` kv heads. The concat identity requires the
+    key-side factor to live per *kv* head, so ``phi_k``'s head dim must be 1 or
+    Hk (head-shared biases like ALiBi/sqdist satisfy this trivially; a per-q-
+    head key factor cannot ride on grouped keys without expanding them).
+    """
+    b, n, h, d = q.shape
+    hk = k.shape[2]
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    assert phi_k.shape[2] in (1, hk), (
+        f"phi_k head dim {phi_k.shape[2]} incompatible with {hk} kv heads")
+    phi_k = jnp.broadcast_to(phi_k, (b, k.shape[1], hk, phi_k.shape[-1]))
+    q_aug = jnp.concatenate([q, (phi_q / scale).astype(q.dtype)], axis=-1)
+    k_aug = jnp.concatenate([k, phi_k.astype(k.dtype)], axis=-1)
+    return q_aug, k_aug
+
+
+# ---------------------------------------------------------------------------
+# App. I — multiplicative bias via channel expansion (Eq. 17)
+# ---------------------------------------------------------------------------
+
+def multiplicative_flashbias_attention(q, k, v, phi_q, phi_k, *,
+                                       mask: MaskSpec = MaskSpec("none"),
+                                       scale: Optional[float] = None):
+    """softmax((q k^T * scale) ⊙ b) v with b = phi_q @ phi_k^T, rank R.
+
+    Eq. 17: q' = [q ⊙ phi_q_1, ..., q ⊙ phi_q_R] (channel expansion to C*R),
+    likewise k'; then q' k'^T = (q k^T) ⊙ (phi_q phi_k^T). Worthwhile iff
+    R <= sqrt(S/C^2 + 1) (Cor. I.2).
+    """
+    b, n, h, d = q.shape
+    m = k.shape[1]
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    r = phi_q.shape[-1]
+    phi_q = jnp.broadcast_to(phi_q, (b, n, h, r))
+    phi_k = jnp.broadcast_to(phi_k, (b, m, h, r))
+    # (B,S,H,D) ⊙ (B,S,H,R) -> (B,S,H,R*D)
+    q_exp = (q[..., None, :] * phi_q[..., :, None]).reshape(b, n, h, r * d)
+    k_exp = (k[..., None, :] * phi_k[..., :, None]).reshape(b, m, h, r * d)
+    return attention(q_exp, k_exp, v, mask=mask, scale=scale, impl="dense")

@@ -1,0 +1,232 @@
+"""Attention-bias taxonomy and the paper's exact low-rank factorizations.
+
+FlashBias (Sec. 3.2) replaces a dense bias ``b = f(x_q, x_k) in R^{N x M}``
+with two factor tensors ``phi_q in R^{N x R}``, ``phi_k in R^{M x R}`` such
+that ``b = phi_q @ phi_k.T``. Attention with bias then becomes standard
+attention over ``C + R`` channels (Eq. 3) and the quadratic bias is never
+materialized in HBM.
+
+This module implements the paper's *exact* decompositions (Table 1 row (a)):
+
+- ALiBi (Example 3.4): ``f(i, j) = slope_h * (j - i)``, rank 2.
+- Squared spatial distance (Example 3.5): ``f(x_i, x_j) = ||x_i - x_j||^2``,
+  rank 3d for d-dimensional coordinates (the paper writes the 3D case, R=9).
+- Learnable-scaled distance (Sec. 4.4 PDE solver):
+  ``f(x_i, x_j) = alpha_i * ||x_i - x_j||^2`` — the per-query scale folds into
+  phi_q, so the rank is unchanged.
+- Multiplicative ``cos(i - j)`` (App. I Example I.1), rank 2.
+
+Conventions
+-----------
+Factor tensors are returned with explicit head dims where the bias is
+per-head: ``phi_q: (H, N, R)``. Helpers below broadcast them to the
+``(B, N, H, R)`` layout the attention paths consume. All factorizations are
+closed-form, differentiable, and O((N+M)R) storage (Thm 3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BiasSpec",
+    "alibi_slopes",
+    "alibi_factors",
+    "alibi_dense",
+    "sqdist_factors",
+    "sqdist_dense",
+    "scaled_sqdist_factors",
+    "scaled_sqdist_dense",
+    "cos_relpos_factors",
+    "cos_relpos_dense",
+    "broadcast_factors",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BiasSpec:
+    """Declarative description of an attention bias, resolved by the model.
+
+    kind:
+      - "none":       no bias.
+      - "alibi":      exact factorization, R=2 (per-head slopes).
+      - "sqdist":     exact factorization of squared spatial distance, R=3d.
+      - "svd":        factors produced offline from a learnable table
+                      (core.decomp.svd_factors); rank = ``rank``.
+      - "neural":     token-wise factor MLPs (core.decomp.NeuralDecomposition).
+      - "dense":      materialize the full N x M bias (paper's baseline).
+    mode:
+      - "flashbias":  consume factors via Eq. 3 (never materialize N x M).
+      - "dense":      materialize f(x_q, x_k) and add to logits (baseline).
+    """
+
+    kind: str = "none"
+    mode: str = "flashbias"
+    rank: int = 0
+    coord_dim: int = 3      # for sqdist
+    negate: bool = True     # biases are usually penalties: b = -f(...)
+
+    def __post_init__(self):
+        assert self.kind in ("none", "alibi", "sqdist", "svd", "neural", "dense")
+        assert self.mode in ("flashbias", "dense")
+
+    @property
+    def effective_rank(self) -> int:
+        if self.kind == "alibi":
+            return 2
+        if self.kind == "sqdist":
+            return 3 * self.coord_dim
+        return self.rank
+
+
+# ---------------------------------------------------------------------------
+# ALiBi (Example 3.4) — rank 2
+# ---------------------------------------------------------------------------
+
+def alibi_slopes(num_heads: int) -> jax.Array:
+    """Geometric slope sequence from the ALiBi paper (Press et al., 2022).
+
+    For ``num_heads`` a power of two the slopes are ``2^(-8h/num_heads)``;
+    otherwise the published interleaving fallback is used.
+    """
+    def pow2_slopes(n):
+        start = 2.0 ** (-(2.0 ** -(math.log2(n) - 3)))
+        return [start * (start ** i) for i in range(n)]
+
+    if math.log2(num_heads).is_integer():
+        vals = pow2_slopes(num_heads)
+    else:
+        closest = 2 ** math.floor(math.log2(num_heads))
+        vals = pow2_slopes(closest)
+        extra = pow2_slopes(2 * closest)[0::2][: num_heads - closest]
+        vals = vals + extra
+    return jnp.asarray(vals, dtype=jnp.float32)
+
+
+def alibi_factors(
+    n: int, m: int, num_heads: int, *, dtype=jnp.float32,
+    q_offset: int = 0, k_offset: int = 0,
+):
+    """Exact rank-2 factorization of the ALiBi bias.
+
+    b[h, i, j] = -slope_h * (i' - j')  with i' = i + q_offset, j' = j + k_offset
+    (the causal-side distance; the causal mask hides j' > i').
+
+    Decomposition (Example 3.4): phi_q[h, i] = slope_h * [-i', 1],
+    phi_k[j] = [1, j']  ==>  phi_q @ phi_k.T = slope_h * (j' - i').
+
+    Returns (phi_q: (H, N, 2), phi_k: (M, 2)).
+    """
+    slopes = alibi_slopes(num_heads).astype(dtype)
+    qi = jnp.arange(n, dtype=dtype) + q_offset
+    kj = jnp.arange(m, dtype=dtype) + k_offset
+    phi_q = jnp.stack([-qi, jnp.ones_like(qi)], axis=-1)  # (N, 2)
+    phi_q = slopes[:, None, None] * phi_q[None]           # (H, N, 2)
+    phi_k = jnp.stack([jnp.ones_like(kj), kj], axis=-1)   # (M, 2)
+    return phi_q, phi_k
+
+
+def alibi_dense(n: int, m: int, num_heads: int, *, dtype=jnp.float32,
+                q_offset: int = 0, k_offset: int = 0) -> jax.Array:
+    """Dense ALiBi bias (H, N, M) — the baseline / oracle."""
+    slopes = alibi_slopes(num_heads).astype(dtype)
+    qi = jnp.arange(n, dtype=dtype)[:, None] + q_offset
+    kj = jnp.arange(m, dtype=dtype)[None, :] + k_offset
+    return slopes[:, None, None] * (kj - qi)[None]
+
+
+# ---------------------------------------------------------------------------
+# Squared spatial distance (Example 3.5) — rank 3d
+# ---------------------------------------------------------------------------
+
+def sqdist_factors(x_q: jax.Array, x_k: jax.Array, *, negate: bool = True):
+    """Exact rank-3d factorization of ``+-||x_q_i - x_k_j||^2``.
+
+    x_q: (..., N, d), x_k: (..., M, d) spatial coordinates. Per Eq. (4), each
+    coordinate axis contributes the triple
+      phi_q = [x^2, 1, -2x],  phi_k = [1, x^2, x]
+    so that phi_q . phi_k = x_i^2 + x_j^2 - 2 x_i x_j = (x_i - x_j)^2.
+
+    Returns (phi_q: (..., N, 3d), phi_k: (..., M, 3d)).
+    """
+    sign = -1.0 if negate else 1.0
+
+    def q_feats(x):
+        # (..., N, d) -> (..., N, d, 3) -> (..., N, 3d)
+        f = jnp.stack([x * x, jnp.ones_like(x), -2.0 * x], axis=-1)
+        return f.reshape(*f.shape[:-2], -1)
+
+    def k_feats(x):
+        f = jnp.stack([jnp.ones_like(x), x * x, x], axis=-1)
+        return f.reshape(*f.shape[:-2], -1)
+
+    return sign * q_feats(x_q), k_feats(x_k)
+
+
+def sqdist_dense(x_q: jax.Array, x_k: jax.Array, *, negate: bool = True) -> jax.Array:
+    """Dense squared-distance bias (..., N, M) — oracle for the factorization."""
+    d2 = jnp.sum((x_q[..., :, None, :] - x_k[..., None, :, :]) ** 2, axis=-1)
+    return -d2 if negate else d2
+
+
+# ---------------------------------------------------------------------------
+# Learnable-scaled distance (Sec. 4.4) — the PDE-solver "adaptive mesh" bias
+# ---------------------------------------------------------------------------
+
+def scaled_sqdist_factors(x_q: jax.Array, x_k: jax.Array, alpha: jax.Array,
+                          *, negate: bool = True):
+    """f(x_i, x_j) = alpha_i * ||x_i - x_j||^2 with per-query learnable alpha.
+
+    alpha broadcasts against the query axis: shape (..., N) or (H, N) etc.
+    The scale folds into phi_q, so rank stays 3d and the factorization remains
+    exact AND differentiable w.r.t. alpha — this is what lets FlashBias train
+    the learnable bias without materializing (or storing the gradient of) the
+    N x M matrix (Table 5).
+    """
+    phi_q, phi_k = sqdist_factors(x_q, x_k, negate=negate)
+    return alpha[..., None] * phi_q, phi_k
+
+
+def scaled_sqdist_dense(x_q, x_k, alpha, *, negate: bool = True):
+    return alpha[..., None] * sqdist_dense(x_q, x_k, negate=negate)
+
+
+# ---------------------------------------------------------------------------
+# Multiplicative cos(i - j) (App. I Example I.1) — rank 2
+# ---------------------------------------------------------------------------
+
+def cos_relpos_factors(n: int, m: int, *, dtype=jnp.float32):
+    """b[i, j] = cos(i - j) = cos i cos j + sin i sin j, rank 2."""
+    qi = jnp.arange(n, dtype=dtype)
+    kj = jnp.arange(m, dtype=dtype)
+    phi_q = jnp.stack([jnp.cos(qi), jnp.sin(qi)], axis=-1)
+    phi_k = jnp.stack([jnp.cos(kj), jnp.sin(kj)], axis=-1)
+    return phi_q, phi_k
+
+
+def cos_relpos_dense(n: int, m: int, *, dtype=jnp.float32) -> jax.Array:
+    qi = jnp.arange(n, dtype=dtype)[:, None]
+    kj = jnp.arange(m, dtype=dtype)[None, :]
+    return jnp.cos(qi - kj)
+
+
+# ---------------------------------------------------------------------------
+# Layout helpers
+# ---------------------------------------------------------------------------
+
+def broadcast_factors(phi: jax.Array, batch: int, seq: int, heads: int) -> jax.Array:
+    """Broadcast a factor tensor to the canonical (B, S, H, R) layout.
+
+    Accepts (S, R), (H, S, R), (B, S, H, R); returns (B, S, H, R).
+    """
+    if phi.ndim == 2:            # (S, R) — shared across batch & heads
+        phi = phi[None, :, None, :]
+    elif phi.ndim == 3:          # (H, S, R) — per-head
+        phi = phi.transpose(1, 0, 2)[None]
+    elif phi.ndim != 4:
+        raise ValueError(f"factor rank {phi.ndim} not in (2, 3, 4)")
+    return jnp.broadcast_to(phi, (batch, seq, heads, phi.shape[-1]))

@@ -1,0 +1,103 @@
+"""Low-rank utilities: energy spectra, rank selection, and the paper's IO model.
+
+Implements the measurement side of Theorems 3.1/3.2 and Corollaries 3.3/3.7:
+given a dense bias matrix we compute its singular-value energy profile, the
+rank needed to retain a target energy fraction, and the storage/HBM-access
+model that justifies FlashBias' speedup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "energy_profile",
+    "rank_for_energy",
+    "retained_energy",
+    "optimal_storage_bytes",
+    "IOModel",
+]
+
+
+def energy_profile(mat: jax.Array) -> jax.Array:
+    """Cumulative singular-value energy fraction of a (possibly batched) matrix.
+
+    Energy of rank r = sum_{i<=r} s_i^2 / sum_i s_i^2 (Remark 3.8's "energy").
+    Returns an array of shape (..., min(N, M)) with monotone entries in (0, 1].
+    """
+    s = jnp.linalg.svd(mat.astype(jnp.float32), compute_uv=False)
+    e = jnp.cumsum(s**2, axis=-1)
+    total = e[..., -1:]
+    return e / jnp.where(total == 0, 1.0, total)
+
+
+def rank_for_energy(mat: jax.Array, energy: float = 0.99) -> int:
+    """Smallest rank retaining ``energy`` fraction of squared singular values."""
+    prof = np.asarray(energy_profile(mat))
+    # batched: use the worst (max) rank over the batch so every slice is covered.
+    flat = prof.reshape(-1, prof.shape[-1])
+    ranks = (flat < energy).sum(axis=-1) + 1
+    return int(ranks.max())
+
+
+def retained_energy(mat: jax.Array, rank: int) -> float:
+    """Energy fraction retained by the best rank-``rank`` approximation."""
+    prof = np.asarray(energy_profile(mat))
+    flat = prof.reshape(-1, prof.shape[-1])
+    idx = min(rank, flat.shape[-1]) - 1
+    return float(flat[:, idx].min())
+
+
+def optimal_storage_bytes(n: int, rank: int, itemsize: int = 2) -> int:
+    """Theorem 3.2: optimal storage of an N x N rank-R dense matrix, Theta(NR).
+
+    The exact bound is (2NR - R^2) scalars; we return it in bytes.
+    """
+    return (2 * n * rank - rank * rank) * itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class IOModel:
+    """HBM-access model from the paper (per head, per batch element).
+
+    All quantities are *scalar element* counts, not bytes; multiply by itemsize
+    for bytes. ``sram`` is in elements too (paper uses S in storage units).
+    """
+
+    n: int  # query length
+    m: int  # key length
+    c: int  # head channel dim
+    rank: int  # bias rank R
+    sram: int  # on-chip memory size S, in elements
+
+    def standard_attention(self) -> float:
+        """Theta(NC + N^2) — materializes logits in HBM (Eq. 6)."""
+        return self.n * self.c + self.n * self.m
+
+    def flashattention(self) -> float:
+        """Theta(N M C^2 / S) — FlashAttention without bias (Eq. 6)."""
+        return self.n * self.m * self.c**2 / self.sram
+
+    def flashattention_with_bias(self) -> float:
+        """Theta(N M C^2 / S + N M) — must stream the dense bias (Ex. 3.9)."""
+        return self.flashattention() + self.n * self.m
+
+    def flashbias(self) -> float:
+        """Cor 3.7: Theta(N M (C^2 + R^2) / S) — factor tensors ride with q/k."""
+        return self.n * self.m * (self.c**2 + self.rank**2) / self.sram
+
+    def flashbias_multiplicative(self) -> float:
+        """App. I: Theta(N M C^2 R^2 / S) for the channel-expansion form."""
+        return self.n * self.m * self.c**2 * self.rank**2 / self.sram
+
+    def multiplicative_worthwhile(self) -> bool:
+        """App. I Cor I.2: worthwhile iff R <= sqrt(S / C^2 + 1)."""
+        return self.rank <= math.sqrt(self.sram / self.c**2 + 1)
+
+    def speedup_over_dense_bias(self) -> float:
+        """Predicted HBM-access ratio (Example 3.9 ~= 6x at C=R=64, S=100KB)."""
+        return self.flashattention_with_bias() / self.flashbias()

@@ -1,0 +1,35 @@
+"""Process-wide tracing flags.
+
+``unroll_scans``: XLA's ``cost_analysis`` counts a while-loop body ONCE,
+regardless of trip count, so a scan-over-layers module under-reports
+FLOPs/bytes/collectives by ~n_layers x. The dry-run therefore lowers each
+cell twice: the production module (scans — compile proof + memory analysis)
+and a cost module with every scan fully unrolled (accurate per-device
+FLOPs / bytes / collective counts). Model code asks ``scan_unroll(n)`` for
+its ``lax.scan(..., unroll=...)`` argument.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unroll_scans(on: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = on
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def unrolling() -> bool:
+    return _UNROLL
+
+
+def scan_unroll(length: int) -> int:
+    """unroll= argument for lax.scan: full trip count in cost mode, else 1."""
+    return max(int(length), 1) if _UNROLL else 1

@@ -1,0 +1,42 @@
+"""Hardware model for the target platform: TPU v5e.
+
+All roofline math in ``repro.analysis`` reads these constants. The container
+itself runs on CPU; these numbers describe the TARGET accelerator, per the
+assignment (197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s per ICI link).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float  # FLOP/s
+    hbm_bandwidth: float    # bytes/s
+    hbm_bytes: int          # capacity
+    ici_link_bandwidth: float  # bytes/s per link (assignment constant)
+    vmem_bytes: int         # on-chip vector memory (the TPU analogue of SRAM)
+    mxu_dim: int            # systolic array side; matmul dims should align
+
+    @property
+    def arithmetic_intensity_knee(self) -> float:
+        """FLOP/byte at which a kernel moves from memory- to compute-bound."""
+        return self.peak_flops_bf16 / self.hbm_bandwidth
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    vmem_bytes=128 * 1024**2,  # ~128 MiB VMEM on v5e (shared scalar+vector)
+    mxu_dim=128,
+)
+
+# Lane/sublane tiling granularity for fp32/bf16 on TPU. BlockSpec shapes in
+# kernels/ are multiples of these.
+TPU_LANE = 128
+TPU_SUBLANE_F32 = 8
+TPU_SUBLANE_BF16 = 16

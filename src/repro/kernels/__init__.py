@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the FlashBias hot spots + jnp oracles.
+
+- ``flashbias_attn``: fused flash attention with low-rank (factored) bias,
+  in-kernel ALiBi, causal/local masks computed from iota.
+- ``flash_decode``: KV-cache decode with grouped q-heads as tile rows,
+  scalar-prefetched per-request lengths, low-rank bias factors.
+- ``ops``: public jit'd wrappers (padding, layout, dispatch, custom_vjp).
+- ``ssd_scan``: fused Mamba2 SSD chunk scan (state in VMEM scratch).
+- ``ref``: pure-jnp oracles the kernels are allclose-tested against.
+
+The callables live in ``ops``: ``ops.flash_attention`` / ``ops.flash_decode``
+(re-exported here as ``flash_attention`` / ``flash_decode_op`` so the
+``flash_decode`` *module* name stays importable).
+"""
+from repro.kernels import (flash_decode, flashbias_attn, ops,  # noqa: F401
+                           ref, ssd_scan)
+from repro.kernels.ops import flash_attention
+from repro.kernels.ops import flash_decode as flash_decode_op
+
+__all__ = ["flash_decode", "flashbias_attn", "ops", "ref",
+           "flash_attention", "flash_decode_op"]

@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: flash-decoding with a KV cache and low-rank bias.
+
+One new token per request attends to a cache of up to S keys. TPU adaptation:
+
+- The G q-heads sharing one kv head form the *rows* of the logits tile
+  (``(G, block_k)``), so GQA turns the tiny N=1 decode matmul into an MXU-
+  shaped one — the TPU analogue of GPU flash-decoding's split-K blocks.
+- The cache sequence axis is the innermost grid axis; online-softmax state
+  (m, l, acc) rides in VMEM scratch (TPU grids are sequential, so the
+  accumulate-across-j pattern is exact, no cross-block reduction pass).
+- Per-request lengths arrive via scalar prefetch (SMEM); blocks past the
+  length are skipped entirely (``pl.when``) — compute *and* the copy of the
+  skipped KV block are elided on real hardware by block-index aliasing.
+- FlashBias factors: ``phi_q`` is (G, R) per kv head, ``phi_k`` rides with the
+  cache at (block_k, R) — rank-R bias costs R/D extra MXU depth, never NM IO.
+- ``slopes`` mode generates the rank-2 ALiBi bias in-kernel (App. C JIT
+  trick): zero bias IO at all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.attention import DEFAULT_MASK_VALUE
+
+__all__ = ["flash_decode_fwd"]
+
+
+def _decode_kernel(
+    lengths_ref,                      # scalar prefetch: (B,) int32 in SMEM
+    q_ref, k_ref, v_ref, phi_q_ref, phi_k_ref, slopes_ref,
+    o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    block_k: int,
+    bias_mode: str,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    k_start = j * block_k
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bk)
+
+        if bias_mode == "phi":
+            pq = phi_q_ref[0, 0].astype(jnp.float32)      # (G, R)
+            pk = phi_k_ref[0, 0].astype(jnp.float32)      # (bk, R)
+            s += jax.lax.dot_general(
+                pq, pk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        g = s.shape[0]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (g, block_k), 1)
+        if bias_mode == "alibi":
+            slope = slopes_ref[0].astype(jnp.float32)     # (G,)
+            rel = (k_pos - (length - 1)).astype(jnp.float32)
+            s += slope[:, None] * rel
+
+        s = jnp.where(k_pos < length, s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, Dv)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_fwd(
+    q: jax.Array,                         # (B, KVH, G, D)
+    k_cache: jax.Array,                   # (B, KVH, S, D)
+    v_cache: jax.Array,                   # (B, KVH, S, Dv)
+    lengths: jax.Array,                   # (B,) int32
+    phi_q: Optional[jax.Array] = None,    # (B, KVH, G, R)
+    phi_k: Optional[jax.Array] = None,    # (B, KVH, S, R)
+    slopes: Optional[jax.Array] = None,   # (KVH, G)
+    *,
+    scale: float,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw decode kernel — S must be a multiple of block_k (see ops.py)."""
+    b, kvh, g, d = q.shape
+    s_len = k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    assert s_len % block_k == 0, (s_len, block_k)
+    bias_mode = ("phi" if phi_q is not None
+                 else ("alibi" if slopes is not None else "none"))
+
+    grid = (b, kvh, s_len // block_k)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h_, j, *_: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, j, *_: (b_, h_, j, 0)),
+        pl.BlockSpec((1, 1, block_k, dv), lambda b_, h_, j, *_: (b_, h_, j, 0)),
+    ]
+    args = [q, k_cache, v_cache]
+    if bias_mode == "phi":
+        r = phi_q.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, 1, g, r), lambda b_, h_, j, *_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, r), lambda b_, h_, j, *_: (b_, h_, j, 0)),
+        ]
+        args += [phi_q, phi_k]
+    else:
+        in_specs += [None, None]
+        args += [None, None]
+    if bias_mode == "alibi":
+        in_specs.append(pl.BlockSpec((1, g), lambda b_, h_, j, *_: (h_, 0)))
+        args.append(slopes)
+    else:
+        in_specs.append(None)
+        args.append(None)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               bias_mode=bias_mode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda b_, h_, j, *_: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dv), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), *args)
+    return out

@@ -1,0 +1,303 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``flash_attention`` / ``flash_decode`` are the entry points the models call.
+They:
+
+- accept the canonical (B, S, H, D) layout and transpose to the kernels'
+  head-major layout;
+- pad every tile dim to TPU alignment (seq -> block multiple, channels/rank
+  -> 128-lane multiple) with mathematically inert zeros, slicing the result
+  back;
+- dispatch between the Pallas kernel (TPU, or ``interpret=True`` on CPU for
+  tests) and the pure-XLA chunked path in ``repro.core.attention`` (which is
+  what the multi-pod dry-run lowers — Pallas does not lower to the CPU
+  backend);
+- expose a ``jax.custom_vjp``: the backward pass re-runs attention via the
+  XLA chunked path's VJP (flash-style recompute — the paper likewise uses
+  the Triton kernel for inference and SDPA autograd for training).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as attn_mod
+from repro.core.attention import MaskSpec
+from repro.kernels import flash_decode as _fd
+from repro.kernels import flashbias_attn as _fa
+
+__all__ = ["flash_attention", "flash_decode", "IMPLS"]
+
+IMPLS = ("xla", "pallas", "pallas_interpret", "io_stub")
+
+_LANE = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    assert impl in IMPLS, impl
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# Full (training / prefill) attention
+# ---------------------------------------------------------------------------
+
+def _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
+              chunk_size=512):
+    if slopes is not None:
+        # materialize rank-2 ALiBi factors (cheap: (N+M)*2 elements)
+        n, m, h = q.shape[1], k.shape[1], q.shape[2]
+        qi = jnp.arange(n, dtype=jnp.float32)
+        kj = jnp.arange(m, dtype=jnp.float32)
+        pq = jnp.stack([-qi, jnp.ones_like(qi)], -1)[None, :, None, :]
+        pq = pq * slopes.reshape(1, 1, h, 1)
+        pk = jnp.stack([jnp.ones_like(kj), kj], -1)[None, :, None, :]
+        phi_q = jnp.broadcast_to(pq, (q.shape[0], n, h, 2)).astype(jnp.float32)
+        phi_k = jnp.broadcast_to(pk, (q.shape[0], m, 1, 2)).astype(jnp.float32)
+    if phi_k is not None and phi_k.shape[2] not in (1, q.shape[2]):
+        phi_k = jnp.broadcast_to(
+            phi_k[:, :, :1], (*phi_k.shape[:2], q.shape[2], phi_k.shape[3]))
+    if phi_k is not None and phi_k.shape[2] == 1:
+        phi_k = jnp.broadcast_to(
+            phi_k, (*phi_k.shape[:2], q.shape[2], phi_k.shape[3]))
+    return attn_mod.attention(
+        q, k, v, mask=MaskSpec(mask_kind, window), scale=scale,
+        phi_q=phi_q, phi_k=phi_k, impl="chunked", chunk_size=chunk_size)
+
+
+def _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
+                 block_q, block_k, interpret):
+    b, n, h, d = q.shape
+    m, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    n_p, m_p = _ceil_to(n, block_q), _ceil_to(m, block_k)
+    d_p, dv_p = _ceil_to(d, _LANE), _ceil_to(dv, _LANE)
+
+    qt = _pad_axis(_pad_axis(q, 1, n_p), 3, d_p).transpose(0, 2, 1, 3)
+    kt = _pad_axis(_pad_axis(k, 1, m_p), 3, d_p).transpose(0, 2, 1, 3)
+    vt = _pad_axis(_pad_axis(v, 1, m_p), 3, dv_p).transpose(0, 2, 1, 3)
+
+    pqt = pkt = None
+    if phi_q is not None:
+        r = phi_q.shape[-1]
+        r_p = _ceil_to(r, _LANE)
+        phi_k_full = jnp.broadcast_to(phi_k, (b, m, h, r))
+        pqt = _pad_axis(_pad_axis(phi_q, 1, n_p), 3, r_p).transpose(0, 2, 1, 3)
+        pkt = _pad_axis(_pad_axis(phi_k_full, 1, m_p), 3, r_p).transpose(0, 2, 1, 3)
+    slopes2 = slopes.reshape(h, 1) if slopes is not None else None
+
+    out = _fa.flashbias_attention_fwd(
+        qt, kt, vt, pqt, pkt, slopes2, scale=scale, mask_kind=mask_kind,
+        window=window, kv_len=m, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[:, :n, :, :dv]
+
+
+def _io_stub_path(q, k, v, phi_q, phi_k):
+    """Deployment-IO accounting stub (dry-run only, ``impl="io_stub"``).
+
+    The Pallas kernel's HBM traffic is exactly: read q, k, v (+ factors)
+    once, write o once — logits/softmax live in VMEM. This stub has the
+    same HBM footprint and output shape but trivial FLOPs, so a cost
+    lowering with it measures the *deployment* memory term (the XLA chunked
+    fallback materializes its softmax pipeline, inflating bytes ~10x).
+    Every input is consumed through a full-read reduction so XLA cannot
+    DCE the loads.
+    """
+    b, n, h, d = q.shape
+    dv = v.shape[-1]
+    eps = jnp.asarray(1e-30, jnp.float32)
+    dep = (jnp.sum(k.astype(jnp.float32)) + jnp.sum(v.astype(jnp.float32)))
+    if phi_q is not None:
+        dep = dep + jnp.sum(phi_q.astype(jnp.float32)) \
+            + jnp.sum(phi_k.astype(jnp.float32))
+    o = q[..., :1].astype(jnp.float32) * eps + dep * eps
+    o = jnp.broadcast_to(o, (b, n, h, dv))
+    return o.astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
+def _flash_attention_core(q, k, v, phi_q, phi_k, slopes,
+                          mask_kind, window, scale, impl, block_q, block_k):
+    if impl == "io_stub":
+        return _io_stub_path(q, k, v, phi_q, phi_k)
+    if impl == "xla":
+        return _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                         scale)
+    return _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                        scale, block_q, block_k,
+                        interpret=(impl == "pallas_interpret"))
+
+
+def _fwd(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale, impl,
+         block_q, block_k):
+    out = _flash_attention_core(q, k, v, phi_q, phi_k, slopes, mask_kind,
+                                window, scale, impl, block_q, block_k)
+    return out, (q, k, v, phi_q, phi_k, slopes)
+
+
+def _bwd(mask_kind, window, scale, impl, block_q, block_k, res, g):
+    q, k, v, phi_q, phi_k, slopes = res
+    if impl == "io_stub":
+        # deployment backward IO: the flash backward re-reads q,k,v(,phi) and
+        # the cotangent once and writes dq,dk,dv(,dphi) once — the stub's own
+        # vjp has exactly that HBM footprint.
+        def fs(q, k, v, phi_q, phi_k):
+            return _io_stub_path(q, k, v, phi_q, phi_k)
+        _, vjp = jax.vjp(fs, q, k, v, phi_q, phi_k)
+        return vjp(g) + (None,)
+
+    # Recompute forward through the differentiable XLA path (flash recompute).
+    def f(q, k, v, phi_q, phi_k, slopes):
+        return _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                         scale)
+    _, vjp = jax.vjp(f, q, k, v, phi_q, phi_k, slopes)
+    return vjp(g)
+
+
+_flash_attention_core.defvjp(_fwd, _bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    phi_q: Optional[jax.Array] = None,
+    phi_k: Optional[jax.Array] = None,
+    slopes: Optional[jax.Array] = None,
+    *,
+    mask_kind: str = "none",
+    window: int = 0,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """FlashBias attention, (B, N, H, D) layout.
+
+    Exactly one of {phi_q+phi_k, slopes, neither} selects the bias mode
+    (factored / in-kernel ALiBi / none). Differentiable in q, k, v, phi_*.
+    """
+    scale = (1.0 / float(np.sqrt(q.shape[-1]))) if scale is None else scale
+    assert not (phi_q is not None and slopes is not None)
+    return _flash_attention_core(q, k, v, phi_q, phi_k, slopes, mask_kind,
+                                 window, scale, _resolve_impl(impl),
+                                 block_q, block_k)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, KV cache) — inference only, no vjp needed
+# ---------------------------------------------------------------------------
+
+def flash_decode(
+    q: jax.Array,                        # (B, 1, H, D)
+    k_cache: jax.Array,                  # (B, S, KVH, D)
+    v_cache: jax.Array,                  # (B, S, KVH, Dv)
+    lengths: jax.Array,                  # (B,) int32
+    phi_q: Optional[jax.Array] = None,   # (B, 1, H, R)
+    phi_k: Optional[jax.Array] = None,   # (B, S, H|1, R)
+    slopes: Optional[jax.Array] = None,  # (H,)
+    *,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    block_k: int = 512,
+) -> jax.Array:
+    """Single-token decode against a KV cache. Returns (B, 1, H, Dv)."""
+    b, _, h, d = q.shape
+    s_len, kvh = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    impl = _resolve_impl(impl)
+
+    if impl == "io_stub":
+        # deployment IO of the decode kernel: read cache + q once, write o
+        dep = (jnp.sum(k_cache.astype(jnp.float32))
+               + jnp.sum(v_cache.astype(jnp.float32)))
+        if phi_k is not None:
+            dep = dep + jnp.sum(phi_k.astype(jnp.float32))
+        eps = jnp.asarray(1e-30, jnp.float32)
+        o = q[..., :1].astype(jnp.float32) * eps + dep * eps
+        return jnp.broadcast_to(o, (b, 1, h, dv)).astype(q.dtype)
+
+    if impl == "xla":
+        phi_k_x = phi_k
+        if phi_k_x is not None and phi_k_x.shape[2] == 1:
+            phi_k_x = jnp.broadcast_to(phi_k_x, (b, s_len, h, phi_k_x.shape[-1]))
+        if slopes is not None:
+            # ALiBi factors for the decode row: q at position lengths-1.
+            qpos = (lengths.astype(jnp.float32) - 1.0)[:, None, None, None]
+            pq = jnp.concatenate([-jnp.broadcast_to(qpos, (b, 1, h, 1)),
+                                  jnp.ones((b, 1, h, 1), jnp.float32)], -1)
+            pq = pq * slopes.reshape(1, 1, h, 1)
+            kj = jnp.arange(s_len, dtype=jnp.float32)
+            pk = jnp.stack([jnp.ones_like(kj), kj], -1)[None, :, None, :]
+            phi_k_x = jnp.broadcast_to(pk, (b, s_len, h, 2))
+            phi_q = pq
+        return attn_mod.attention(
+            q, k_cache, v_cache, mask=MaskSpec("none"), scale=scale,
+            phi_q=phi_q, phi_k=phi_k_x, kv_length=lengths,
+            impl="chunked", chunk_size=min(block_k, s_len))
+
+    # Pallas path: head-major grouped layout, padded tiles.
+    g = h // kvh
+    block_k = min(block_k, s_len)
+    s_p = _ceil_to(s_len, block_k)
+    d_p, dv_p = _ceil_to(d, _LANE), _ceil_to(dv, _LANE)
+    g_p = _ceil_to(g, 8)
+
+    def to_grouped_q(x, last_p):
+        # (B, 1, H, E) -> (B, KVH, G, E) padded
+        x = x[:, 0].reshape(b, kvh, g, x.shape[-1])
+        x = _pad_axis(_pad_axis(x, 2, g_p), 3, last_p)
+        return x
+
+    def to_cache(x, last_p):
+        # (B, S, KVH, E) -> (B, KVH, S_p, E)
+        x = _pad_axis(_pad_axis(x.transpose(0, 2, 1, 3), 2, s_p), 3, last_p)
+        return x
+
+    qt = to_grouped_q(q, d_p)
+    kt = to_cache(k_cache, d_p)
+    vt = to_cache(v_cache, dv_p)
+    pqt = pkt = None
+    if phi_q is not None:
+        r = phi_q.shape[-1]
+        r_p = _ceil_to(r, _LANE)
+        pqt = to_grouped_q(phi_q, r_p)
+        phi_k_full = jnp.broadcast_to(phi_k, (b, s_len, h, r))
+        # key factors per q-head; for grouped layout take the kv-head slice
+        # (valid when the factor is head-shared or per-kv-head).
+        pk_kv = phi_k_full.reshape(b, s_len, kvh, g, r)[:, :, :, 0]
+        pkt = to_cache(pk_kv, r_p)
+    slopes_g = None
+    if slopes is not None:
+        slopes_g = _pad_axis(slopes.reshape(kvh, g), 1, g_p)
+
+    out = _fd.flash_decode_fwd(
+        qt, kt, vt, lengths, pqt, pkt, slopes_g, scale=scale,
+        block_k=block_k, interpret=(impl == "pallas_interpret"))
+    out = out[:, :, :g, :dv].reshape(b, 1, h, dv)
+    return out

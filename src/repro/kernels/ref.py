@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is deliberately naive: dense logits, dense softmax, no
+chunking, fp32 throughout. The kernels (and the XLA chunked path) are tested
+``assert_allclose`` against these across shape/dtype sweeps.
+
+Layout: q (B, N, H, D); k, v (B, M, K, D) with H % K == 0 (GQA).
+Factors phi_q (B, N, H, R); phi_k (B, M, H|1, R). Dense bias (B|1, H, N, M).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
+
+__all__ = ["mha_reference", "decode_reference"]
+
+
+def _expand_kv(x: jax.Array, h: int) -> jax.Array:
+    """(B, M, K, D) -> (B, M, H, D) repeating each kv head over its group."""
+    b, m, kvh, d = x.shape
+    if kvh == h:
+        return x
+    assert h % kvh == 0
+    return jnp.repeat(x, h // kvh, axis=2)
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bias: Optional[jax.Array] = None,
+    phi_q: Optional[jax.Array] = None,
+    phi_k: Optional[jax.Array] = None,
+    mask_kind: str = "none",
+    window: int = 0,
+    q_offset: int = 0,
+    kv_length: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Dense-softmax oracle for (FlashBias) attention. Returns (B, N, H, Dv)."""
+    b, n, h, d = q.shape
+    m = k.shape[1]
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    kf = _expand_kv(k, h).astype(jnp.float32)
+    vf = _expand_kv(v, h).astype(jnp.float32)
+    s = jnp.einsum("bnhd,bmhd->bhnm", q.astype(jnp.float32), kf) * scale
+    if phi_q is not None:
+        pk = jnp.broadcast_to(phi_k, (b, m, h, phi_k.shape[-1]))
+        s = s + jnp.einsum("bnhr,bmhr->bhnm", phi_q.astype(jnp.float32),
+                           pk.astype(jnp.float32))
+    if bias is not None:
+        bias4 = bias if bias.ndim == 4 else bias[None]
+        s = s + bias4.astype(jnp.float32)
+    q_pos = jnp.arange(n) + q_offset
+    k_pos = jnp.arange(m)
+    allowed = jnp.ones((n, m), bool)
+    if mask_kind in ("causal", "local"):
+        allowed &= q_pos[:, None] >= k_pos[None, :]
+    if mask_kind == "local":
+        allowed &= (q_pos[:, None] - k_pos[None, :]) < window
+    if kv_length is not None:
+        allowed &= (k_pos < kv_length)[None, :]
+    s = jnp.where(allowed[None, None], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnm,bmhd->bnhd", p, vf)
+    return o.astype(q.dtype)
+
+
+def decode_reference(
+    q: jax.Array,            # (B, 1, H, D) — one new token
+    k_cache: jax.Array,      # (B, S, K, D)
+    v_cache: jax.Array,      # (B, S, K, Dv)
+    lengths: jax.Array,      # (B,) int32 — valid cache entries per request
+    *,
+    phi_q: Optional[jax.Array] = None,   # (B, 1, H, R)
+    phi_k: Optional[jax.Array] = None,   # (B, S, H|1, R)
+    slopes: Optional[jax.Array] = None,  # (H,) ALiBi slopes (in-kernel bias)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token decode oracle. The query sits at position lengths[b]-1."""
+    b, _, h, d = q.shape
+    s_len = k_cache.shape[1]
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    kf = _expand_kv(k_cache, h).astype(jnp.float32)
+    vf = _expand_kv(v_cache, h).astype(jnp.float32)
+    s = jnp.einsum("bhd,bmhd->bhm", q[:, 0].astype(jnp.float32), kf) * scale
+    if phi_q is not None:
+        pk = jnp.broadcast_to(phi_k, (b, s_len, h, phi_k.shape[-1]))
+        s = s + jnp.einsum("bhr,bmhr->bhm", phi_q[:, 0].astype(jnp.float32),
+                           pk.astype(jnp.float32))
+    k_pos = jnp.arange(s_len)
+    if slopes is not None:
+        q_pos = (lengths - 1)[:, None]                        # (B, 1)
+        rel = (k_pos[None, :] - q_pos).astype(jnp.float32)    # (B, S) <= 0
+        s = s + slopes[None, :, None] * rel[:, None, :]
+    allowed = k_pos[None, :] < lengths[:, None]               # (B, S)
+    s = jnp.where(allowed[:, None, :], s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhm,bmhd->bhd", p, vf)
+    return o[:, None].astype(q.dtype)

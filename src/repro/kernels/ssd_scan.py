@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused Mamba2 SSD chunk scan.
+
+Identified in EXPERIMENTS.md §Perf (hymba/mamba cells) as the remaining
+memory hot spot: the XLA SSD path materializes the (B, nc, Q, Q, H) decay /
+weight tensors to HBM-visible buffers; this kernel keeps the whole
+intra-chunk pipeline in VMEM and carries the (P, N) state in scratch across
+the sequential chunk axis — the same revisiting-accumulator pattern as the
+flash attention kernel.
+
+Per (batch, head, chunk) tile:
+
+    cum   = cumsum(dt * a)                 (Q,)     VMEM
+    L     = tril(exp(cum_i - cum_j))       (Q, Q)   VMEM, never HBM
+    w     = (c b^T) . L . dt_j             (Q, Q)
+    y     = w @ x  +  exp(cum) c @ h       (Q, P)   two MXU calls
+    h     = exp(cum_Q) h + (dt*sdec*b)^T @ x        state update in scratch
+
+HBM traffic: read x, dt, b, c once; write y once; h never leaves VMEM —
+exactly the io_stub accounting the roofline's adjusted memory term assumes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_fwd"]
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref,
+                h_scr,
+                *, chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q, 1) -> (Q,)
+    dt = dt[:, 0]
+    a = a_ref[0, 0]                              # scalar decay rate (<0)
+    bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+
+    cum = jnp.cumsum(dt * a)                     # (Q,) inclusive
+    seg = cum[:, None] - cum[None, :]            # (Q, Q)
+    q = x.shape[0]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    w = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # inter-chunk: y += exp(cum) * (c @ h^T);  h: (P, N)
+    h = h_scr[...]
+    ch = jax.lax.dot_general(cm, h, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, P)
+    y = y + jnp.exp(cum)[:, None] * ch
+
+    # state update: h' = exp(cum_Q) h + sum_j sdec_j dt_j x_j b_j^T
+    sdec = jnp.exp(cum[-1] - cum) * dt                            # (Q,)
+    xw = x * sdec[:, None]                                        # (Q, P)
+    upd = jax.lax.dot_general(xw, bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    h_scr[...] = jnp.exp(cum[-1]) * h + upd
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_fwd(x: jax.Array,      # (B, H, S, P)
+                 dt: jax.Array,     # (B, H, S, 1)  (softplus'd, > 0)
+                 a: jax.Array,      # (H, 1) negative decay rates
+                 b: jax.Array,      # (B, 1|H, S, N)
+                 c: jax.Array,      # (B, 1|H, S, N)
+                 *,
+                 chunk: int = 256,
+                 interpret: bool = False) -> jax.Array:
+    """Raw kernel entry — S must be a multiple of ``chunk`` (pad upstream).
+
+    Returns y (B, H, S, P). b/c with a singleton head dim are broadcast
+    (ngroups=1, the assigned configs' setting).
+    """
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    if b.shape[1] == 1:
+        b = jnp.broadcast_to(b, (bsz, h, s, n))
+        c = jnp.broadcast_to(c, (bsz, h, s, n))
+    nc = s // chunk
+
+    grid = (bsz, h, nc)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, j: (h_, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b_, h_, j: (b_, h_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda b_, h_, j: (b_, h_, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return out

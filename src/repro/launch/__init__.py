@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve entry points.
+
+NOTE: do not import ``dryrun`` from here — it must own the very first jax
+initialization (it sets XLA_FLAGS for 512 placeholder devices before any
+other import).
+"""
+from repro.launch.mesh import make_production_mesh
+
+__all__ = ["make_production_mesh"]

@@ -1,0 +1,17 @@
+"""Production mesh construction (a FUNCTION, so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = (data, model) — 256 chips of TPU v5e.
+    Multi-pod:  (2, 16, 16) = (pod, data, model) — 512 chips across 2 pods;
+    the ``pod`` axis composes with ``data`` into the DP/FSDP product (intra-
+    pod reduce-scatter + inter-pod DCN all-reduce fall out of GSPMD)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,84 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant loop on whatever devices exist. On the container's
+CPU this trains smoke-scale configs end-to-end (see examples/); on a real
+pod the same entry point runs the production config under
+``make_production_mesh()`` with the sharding rules from repro.dist.
+
+Flags mirror the production story: ``--smoke`` (reduced config), ``--mesh``
+(build the production mesh; requires the device count), ``--steps``,
+``--ckpt-dir`` (restart-safe), ``--grad-accum``, ``--schedule wsd|cosine``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.data import LMBatches
+from repro.dist import Rules, use_mesh_rules
+from repro.models import get_model
+from repro.models.common import init_params, param_shardings
+from repro.optim import AdamW, cosine, wsd
+from repro.train import TrainLoop, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log", default=None)
+    ap.add_argument("--mesh", action="store_true",
+                    help="build the production mesh (needs 256 devices)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(args.seed))
+
+    if args.schedule == "wsd":   # minicpm's schedule
+        lr_fn = wsd(args.lr, args.steps // 10, int(args.steps * 0.7),
+                    args.steps - args.steps // 10 - int(args.steps * 0.7))
+    else:
+        lr_fn = cosine(args.lr, args.steps // 10, args.steps)
+    opt = AdamW(lr_fn=lr_fn)
+    opt_state = opt.init(params)
+
+    grad_accum = args.grad_accum or cfg.grad_accum
+    data = LMBatches(vocab=cfg.vocab, seq_len=args.seq,
+                     global_batch=args.batch, seed=args.seed,
+                     frontend_len=cfg.frontend_len, d_model=cfg.d_model)
+
+    def data_fn(step):
+        return {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+
+    ctx = None
+    if args.mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+        ctx = use_mesh_rules(mesh, Rules())
+        ctx.__enter__()
+
+    step_fn = make_train_step(model.loss, opt, grad_accum=grad_accum)
+    loop = TrainLoop(step_fn, data_fn, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every, log_path=args.log)
+    params, opt_state, info = loop.run(params, opt_state, args.steps)
+    print(f"[train] {cfg.name}: {info}")
+    if ctx is not None:
+        ctx.__exit__(None, None, None)
+    return info
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: one decoder-LM family covering dense/MoE/SSM/hybrid archs,
+plus the paper's own models (SwinV2 window attention, PDE solver,
+Pairformer-lite). ``api`` exposes the uniform Model interface the launcher,
+trainer and server consume.
+"""
+from repro.models import api, common, lm, pairformer, pde, ssd, swin  # noqa: F401
+from repro.models.api import get_model
+
+__all__ = ["api", "common", "lm", "pairformer", "pde", "ssd", "swin",
+           "get_model"]

@@ -1,0 +1,125 @@
+"""Uniform Model interface consumed by the trainer, server and dry-run.
+
+``get_model(cfg)`` returns a ``Model`` with:
+
+- ``template()``                     — PDef tree (shapes + sharding axes),
+- ``loss(params, batch)``            — training loss,
+- ``prefill(params, batch, max_len)``— prompt -> (logits, cache),
+- ``decode(params, cache, tokens)``  — one token -> (logits, cache),
+- ``init_cache(batch, max_len)``     — zeroed cache pytree,
+- ``input_specs(shape)``             — ShapeDtypeStruct stand-ins for every
+  model input of an assigned (shape) cell: weak-type-correct, shardable,
+  never allocated. This is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import lm, pairformer, pde, swin
+
+__all__ = ["Model", "get_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    template: Callable[[], dict]
+    loss: Callable
+    prefill: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    init_cache: Optional[Callable] = None
+    input_specs: Optional[Callable] = None
+
+
+def _lm_model(cfg: ArchConfig) -> Model:
+    def input_specs(shape: ShapeSpec, *, abstract_cache: bool = True):
+        """Inputs for one dry-run cell. For decode kinds this includes the
+        KV/SSM cache as ShapeDtypeStructs (``serve_step`` takes it as input).
+        """
+        b, s = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        front = cfg.frontend_len
+        specs: dict = {}
+        if shape.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - front), tok)
+            specs["labels"] = jax.ShapeDtypeStruct((b, s - front), tok)
+            if front:
+                specs["frontend"] = jax.ShapeDtypeStruct(
+                    (b, front, cfg.d_model), jnp.dtype(cfg.dtype))
+        elif shape.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s - front), tok)
+            if front:
+                specs["frontend"] = jax.ShapeDtypeStruct(
+                    (b, front, cfg.d_model), jnp.dtype(cfg.dtype))
+        elif shape.kind == "decode":
+            if abstract_cache:   # never allocates (command-r 32k cache = TBs)
+                cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+            else:
+                cache = lm.init_cache(cfg, b, s)
+            specs["cache"] = cache
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), tok)
+        return specs
+
+    return Model(
+        cfg=cfg,
+        template=lambda: lm.lm_template(cfg),
+        loss=lambda p, batch: lm.loss_fn(p, batch, cfg),
+        prefill=lambda p, batch, max_len=None: lm.prefill(
+            p, batch, cfg, max_len=max_len),
+        decode=lambda p, cache, tokens: lm.decode_step(p, cache, tokens, cfg),
+        init_cache=lambda b, max_len, length=0: lm.init_cache(
+            cfg, b, max_len, length=length),
+        input_specs=input_specs,
+    )
+
+
+def _swin_model(cfg: ArchConfig) -> Model:
+    def input_specs(shape: ShapeSpec, **_):
+        b = shape.global_batch
+        return {"patches": jax.ShapeDtypeStruct((b, 4, cfg.window, 48),
+                                                jnp.float32),
+                "labels": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    return Model(cfg=cfg,
+                 template=lambda: swin.swin_template(cfg),
+                 loss=lambda p, batch: swin.classify_loss(p, batch, cfg),
+                 input_specs=input_specs)
+
+
+def _pde_model(cfg: ArchConfig) -> Model:
+    def input_specs(shape: ShapeSpec, **_):
+        b, n = shape.global_batch, shape.seq_len
+        return {"coords": jax.ShapeDtypeStruct((b, n, cfg.coord_dim),
+                                               jnp.float32),
+                "targets": jax.ShapeDtypeStruct((b, n, 4), jnp.float32)}
+    return Model(cfg=cfg,
+                 template=lambda: pde.pde_template(cfg),
+                 loss=lambda p, batch: pde.regression_loss(p, batch, cfg),
+                 input_specs=input_specs)
+
+
+def _pairformer_model(cfg: ArchConfig) -> Model:
+    def input_specs(shape: ShapeSpec, **_):
+        b, n = shape.global_batch, shape.seq_len
+        return {"feats": jax.ShapeDtypeStruct((b, n, 64), jnp.float32),
+                "coords": jax.ShapeDtypeStruct((b, n, 3), jnp.float32)}
+    return Model(cfg=cfg,
+                 template=lambda: pairformer.pairformer_template(cfg),
+                 loss=lambda p, batch: pairformer.denoise_loss(p, batch, cfg),
+                 input_specs=input_specs)
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        return _lm_model(cfg)
+    if cfg.family == "swin":
+        return _swin_model(cfg)
+    if cfg.family == "pde":
+        return _pde_model(cfg)
+    if cfg.family == "pairformer":
+        return _pairformer_model(cfg)
+    raise ValueError(cfg.family)

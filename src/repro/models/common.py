@@ -1,0 +1,193 @@
+"""Parameter-template machinery + layers shared by every model.
+
+A model is described by a *template*: a pytree whose leaves are ``PDef``
+(shape, logical sharding axes, init law, dtype). One template drives
+
+- ``init_params``      — materialize real arrays (tests, examples),
+- ``abstract_params``  — ShapeDtypeStructs (the dry-run never allocates),
+- ``param_shardings``  — NamedShardings from the logical-axis rules,
+
+so shapes, shardings and init can never drift apart. ``PDef`` is a pytree
+*leaf* (deliberately not registered as a container).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as dshard
+
+__all__ = ["PDef", "is_pdef", "tree_map_pdef", "init_params",
+           "abstract_params", "param_shardings", "param_specs", "stack_layers",
+           "cast_floats", "param_bytes", "rmsnorm", "swiglu", "gelu_mlp",
+           "embed_lookup", "unembed_logits", "cross_entropy_loss",
+           "apply_rope", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    """One parameter: shape + logical axes + init law.
+
+    init: ("normal", stddev) | ("zeros",) | ("ones",) | ("slopes", n_real)
+    — "slopes" materializes ALiBi slopes for the first ``n_real`` heads and
+    zeros for TP padding heads.
+    """
+    shape: tuple
+    axes: tuple
+    init: tuple = ("normal", 0.02)
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def tree_map_pdef(fn, tmpl, *rest):
+    return jax.tree.map(fn, tmpl, *rest, is_leaf=is_pdef)
+
+
+def _materialize(pdef: PDef, key) -> jax.Array:
+    kind = pdef.init[0]
+    dt = jnp.dtype(pdef.dtype)
+    if kind == "zeros":
+        return jnp.zeros(pdef.shape, dt)
+    if kind == "ones":
+        return jnp.ones(pdef.shape, dt)
+    if kind == "slopes":
+        from repro.core.bias import alibi_slopes
+        n_real = pdef.init[1]
+        s = alibi_slopes(n_real)
+        s = jnp.concatenate([s, jnp.zeros((pdef.shape[-1] - n_real,))])
+        return jnp.broadcast_to(s, pdef.shape).astype(dt)
+    if kind == "normal":
+        return (pdef.init[1] * jax.random.normal(key, pdef.shape)).astype(dt)
+    raise ValueError(pdef.init)
+
+
+def init_params(tmpl, key):
+    leaves, treedef = jax.tree.flatten(tmpl, is_leaf=is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_materialize(p, k) for p, k in zip(leaves, keys)])
+
+
+def abstract_params(tmpl):
+    return tree_map_pdef(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)), tmpl)
+
+
+def param_specs(tmpl, mesh, rules: dshard.Rules):
+    return tree_map_pdef(
+        lambda p: dshard.spec_for(p.axes, mesh, rules), tmpl)
+
+
+def param_shardings(tmpl, mesh, rules: dshard.Rules):
+    from jax.sharding import NamedSharding
+    return tree_map_pdef(
+        lambda p: NamedSharding(mesh, dshard.spec_for(p.axes, mesh, rules)),
+        tmpl)
+
+
+def stack_layers(layer_tmpl, n_layers: int):
+    """Add a leading scanned-layers dim (never sharded) to every leaf."""
+    return tree_map_pdef(
+        lambda p: PDef((n_layers,) + p.shape, ("layers",) + p.axes,
+                       p.init, p.dtype),
+        layer_tmpl)
+
+
+def cast_floats(tree, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def param_bytes(tmpl) -> int:
+    leaves = jax.tree.leaves(tmpl, is_leaf=is_pdef)
+    return sum(int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+               for p in leaves)
+
+
+def count_params(tmpl) -> int:
+    leaves = jax.tree.leaves(tmpl, is_leaf=is_pdef)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def swiglu(x, wi_fused, wo):
+    """SwiGLU FFN with FUSED gate+up projection.
+
+    ``wi_fused``: (d, f, 2) — gate at [..., 0], up at [..., 1]; the fused
+    dim is trailing so the TP-sharded f dim stays evenly sharded (a (d, 2f)
+    concat would put each half on half the shards). One matmul instead of
+    two means the backward dL/dx is ONE transpose matmul -> ONE partial-sum
+    all-reduce over the model axis instead of a combined pair (halves the
+    MLP's backward activation wire; EXPERIMENTS.md §Perf iteration 4).
+    """
+    h2 = jnp.einsum("bsd,dft->bsft", x, wi_fused)
+    h2 = dshard.constrain(h2, "batch", "seq", "mlp", None)
+    h = jax.nn.silu(h2[..., 0]) * h2[..., 1]
+    h = dshard.constrain(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+def gelu_mlp(x, wi, wo):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, wi))
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Gather rows of a (possibly vocab-sharded) embedding table."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Tied unembedding: (B,S,D) @ (V,D)^T -> (B,S,V), vocab TP-sharded."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return dshard.constrain(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab_real: int) -> jax.Array:
+    """Mean next-token CE. Uses take-along-vocab (no one-hot materialized —
+    the (B,S,V) one-hot would dwarf everything else at V=256k)."""
+    logits = logits.astype(jnp.float32)
+    # padded vocab rows exist but labels never point at them; mask anyway
+    if vocab_real < logits.shape[-1]:
+        iota = jnp.arange(logits.shape[-1])
+        logits = jnp.where(iota >= vocab_real, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               base: float = 10000.0) -> jax.Array:
+    """RoPE on (B,S,H,D) with positions (B,S). Kept for the multiplicative-
+    bias extension (App. I); assigned LM archs default to FlashBias-ALiBi."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)

@@ -1,0 +1,623 @@
+"""Decoder LM covering the dense / MoE / SSM / hybrid assigned families.
+
+One parameter template + three entry points per family:
+
+- ``loss_fn(params, batch, cfg)``        — training loss (scan over layers,
+  remat policy from cfg, FlashBias-ALiBi attention).
+- ``prefill(params, batch, cfg)``        — run the prompt, build the cache.
+- ``decode_step(params, cache, tokens, cfg)`` — one token against the cache
+  (flash-decoding kernel / XLA path; ring cache for sliding-window layers;
+  constant-size SSM state for ssm/hybrid).
+
+TP padding (heads/vocab/experts -> multiples of cfg.tp) is *mathematically
+exact*: padded q-heads have zero o-proj rows, padded experts get -inf router
+logits, padded vocab rows are masked out of the loss. The waste is visible
+as MODEL_FLOPS/HLO_FLOPS < 1 in the roofline table and is a hillclimb lever.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist import sharding as dshard
+from repro.dist.sharding import constrain
+from repro.kernels import ops as kops
+from repro import flags
+from repro.models import ssd
+from repro.models.common import (PDef, cross_entropy_loss, embed_lookup,
+                                 rmsnorm, stack_layers, swiglu,
+                                 unembed_logits)
+
+__all__ = ["lm_template", "loss_fn", "prefill", "decode_step", "init_cache",
+           "forward_hidden"]
+
+
+# ---------------------------------------------------------------------------
+# Template
+# ---------------------------------------------------------------------------
+
+def _attn_template(cfg: ArchConfig) -> dict:
+    d, hp, kvp = cfg.d_model, cfg.heads_padded, cfg.kv_heads_padded
+    hd = cfg.resolved_head_dim
+    sd = 0.02
+    return {
+        "wq": PDef((d, hp, hd), ("fsdp", "heads", None), ("normal", sd)),
+        "wk": PDef((d, kvp, hd), ("fsdp", "kv_heads", None), ("normal", sd)),
+        "wv": PDef((d, kvp, hd), ("fsdp", "kv_heads", None), ("normal", sd)),
+        "wo": PDef((hp, hd, d), ("heads", None, "fsdp"),
+                   ("normal", sd / np.sqrt(2 * cfg.n_layers))),
+        "slopes": PDef((hp,), (None,), ("slopes", cfg.n_heads)),
+    }
+
+
+def _mlp_template(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    sd = 0.02
+    return {
+        # gate+up FUSED (trailing dim 2) -> one matmul, one backward AR
+        "wi": PDef((d, f, 2), ("fsdp", "mlp", None), ("normal", sd)),
+        "wo": PDef((f, d), ("mlp", "fsdp"),
+                   ("normal", sd / np.sqrt(2 * cfg.n_layers))),
+    }
+
+
+def _moe_template(cfg: ArchConfig) -> dict:
+    d, f, ep = cfg.d_model, cfg.d_ff, cfg.experts_padded
+    sd = 0.02
+    return {
+        "router": PDef((d, ep), ("fsdp", None), ("normal", sd)),
+        "wi": PDef((ep, d, f, 2), ("expert", "fsdp", None, None),
+                   ("normal", sd)),
+        "wo": PDef((ep, f, d), ("expert", None, "fsdp"),
+                   ("normal", sd / np.sqrt(2 * cfg.n_layers))),
+    }
+
+
+def _ssm_template(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    hs, p, n = cfg.ssm_heads_padded, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.conv_width
+    sd = 0.02
+    return {
+        "in_x": PDef((d, hs, p), ("fsdp", "heads", None), ("normal", sd)),
+        "in_z": PDef((d, hs, p), ("fsdp", "heads", None), ("normal", sd)),
+        "in_b": PDef((d, n), ("fsdp", None), ("normal", sd)),
+        "in_c": PDef((d, n), ("fsdp", None), ("normal", sd)),
+        "in_dt": PDef((d, hs), ("fsdp", "heads"), ("normal", sd)),
+        "conv_w": PDef((w, hs, p), (None, "heads", None), ("normal", 0.2)),
+        "conv_bc_w": PDef((w, 2 * n), (None, None), ("normal", 0.2)),
+        "a_log": PDef((hs,), ("heads",), ("zeros",)),
+        "dt_bias": PDef((hs,), ("heads",), ("zeros",)),
+        "d_skip": PDef((hs,), ("heads",), ("ones",)),
+        "gate_norm": PDef((hs, p), ("heads", None), ("zeros",)),
+        "out": PDef((hs, p, d), ("heads", None, "fsdp"),
+                    ("normal", sd / np.sqrt(2 * cfg.n_layers))),
+    }
+
+
+def _layer_template(cfg: ArchConfig) -> dict:
+    layer: dict = {"ln1": PDef((cfg.d_model,), (None,), ("zeros",))}
+    if cfg.family in ("dense", "moe", "hybrid"):
+        layer["attn"] = _attn_template(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        layer["ssm"] = _ssm_template(cfg)
+    if cfg.family == "hybrid":
+        layer["branch_norm_attn"] = PDef((cfg.d_model,), (None,), ("zeros",))
+        layer["branch_norm_ssm"] = PDef((cfg.d_model,), (None,), ("zeros",))
+    if cfg.family == "moe":
+        layer["moe"] = _moe_template(cfg)
+        layer["ln2"] = PDef((cfg.d_model,), (None,), ("zeros",))
+    elif cfg.family in ("dense", "hybrid"):
+        layer["mlp"] = _mlp_template(cfg)
+        layer["ln2"] = PDef((cfg.d_model,), (None,), ("zeros",))
+    return layer
+
+
+def lm_template(cfg: ArchConfig) -> dict:
+    return {
+        "embed": PDef((cfg.vocab_padded, cfg.d_model), ("vocab", "fsdp"),
+                      ("normal", 0.02)),
+        "layers": stack_layers(_layer_template(cfg), cfg.n_layers),
+        "final_norm": PDef((cfg.d_model,), (None,), ("zeros",)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Attention (FlashBias-ALiBi; the paper's technique lives HERE)
+# ---------------------------------------------------------------------------
+
+def _attention(lp: dict, x: jax.Array, cfg: ArchConfig, *,
+               mask_kind: str, q_offset=0) -> jax.Array:
+    """Full-sequence attention (train / prefill). Returns (y, k, v)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+
+    slopes = None
+    phi_q = phi_k = None
+    dense_bias = None
+    if cfg.bias_kind == "alibi":
+        if cfg.bias_mode == "flashbias":
+            slopes = lp["slopes"].astype(jnp.float32)
+        else:  # dense baseline: materialize the (H, N, M) bias (paper A/B)
+            from repro.core.bias import alibi_dense
+            n = x.shape[1]
+            bd = alibi_dense(n, n, cfg.n_heads)
+            pad = cfg.heads_padded - cfg.n_heads
+            dense_bias = jnp.pad(bd, ((0, pad), (0, 0), (0, 0)))[None]
+
+    if dense_bias is not None:
+        from repro.core.attention import MaskSpec, attention as core_attn
+        o = core_attn(q, k, v, mask=MaskSpec(mask_kind, cfg.window),
+                      bias=dense_bias, impl="chunked",
+                      chunk_size=cfg.attn_chunk)
+    else:
+        o = kops.flash_attention(
+            q, k, v, phi_q, phi_k, slopes, mask_kind=mask_kind,
+            window=cfg.window, impl=cfg.attn_impl, block_q=128, block_k=128)
+    y = jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(dt))
+    return constrain(y, "batch", "seq", None), k, v
+
+
+def _attention_decode(lp: dict, x: jax.Array, k_cache, v_cache, lengths,
+                      cfg: ArchConfig):
+    """One-token attention against a (possibly ring) cache."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
+    k_new = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
+    v_new = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
+    slopes = (lp["slopes"].astype(jnp.float32)
+              if cfg.bias_kind == "alibi" else None)
+    sc = k_cache.shape[1]
+
+    # io_stub (dry-run accounting only): the donated cache is updated
+    # IN PLACE on hardware (one row written); the functional `.at[].set`
+    # would count a full cache read+write per layer in cost_analysis.
+    skip_scatter = cfg.attn_impl == "io_stub"
+    if cfg.window and cfg.window == sc:            # ring (sliding window)
+        slot = (lengths - 1) % sc                  # position of the new token
+        bidx = jnp.arange(x.shape[0])
+        if not skip_scatter:
+            k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+            v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+        o = _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg)
+    else:                                          # full cache
+        pos = lengths - 1
+        bidx = jnp.arange(x.shape[0])
+        if not skip_scatter:
+            k_cache = k_cache.at[bidx, pos].set(k_new[:, 0])
+            v_cache = v_cache.at[bidx, pos].set(v_new[:, 0])
+        o = kops.flash_decode(q, k_cache, v_cache, lengths, slopes=slopes,
+                              impl=cfg.attn_impl, block_k=cfg.attn_chunk)
+    y = jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(dt))
+    return y, k_cache, v_cache
+
+
+def _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg):
+    """Dense decode over a ring cache of size window (small: <= few K).
+
+    Slot s holds absolute position p = len-1 - ((len-1 - s) mod W), valid
+    iff p >= 0. ALiBi bias from absolute positions; softmax over the window.
+    """
+    b, _, h, e = q.shape
+    w = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(e)
+    slot = jnp.arange(w)
+    last = (lengths - 1)[:, None]
+    pos = last - ((last - slot) % w)                     # (B, W)
+    valid = pos >= 0
+    kf = jnp.repeat(k_cache, g, axis=2)
+    vf = jnp.repeat(v_cache, g, axis=2)
+    s = jnp.einsum("bhe,bwhe->bhw", q[:, 0].astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    if slopes is not None:
+        rel = (pos - last).astype(jnp.float32)           # <= 0
+        s = s + slopes[None, :, None] * rel[:, None, :]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhw,bwhe->bhe", p, vf.astype(jnp.float32))
+    return o[:, None].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN (GShard-style capacity dispatch; EP over the model axis)
+# ---------------------------------------------------------------------------
+
+def _moe_capacity(cfg: ArchConfig, s: int) -> int:
+    c = int(np.ceil(s * cfg.top_k / cfg.experts_padded * cfg.capacity_factor))
+    return max(1, c)
+
+
+def _moe_ffn(mp: dict, x: jax.Array, cfg: ArchConfig):
+    """Returns (y, aux_loss). x: (B, S, D)."""
+    b, s, d = x.shape
+    ep, k = cfg.experts_padded, cfg.top_k
+    cap = _moe_capacity(cfg, s)
+    dt = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, mp["router"].astype(dt))
+    logits = logits.astype(jnp.float32)
+    if cfg.n_experts < ep:                     # padded experts never win
+        iota = jnp.arange(ep)
+        logits = jnp.where(iota >= cfg.n_experts, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # slot-major one-hot: (B, K, S, E); positions assigned slot-0 first
+    onehot = jax.nn.one_hot(gate_idx, ep, dtype=jnp.float32)    # (B,S,K,E)
+    sel = onehot.transpose(0, 2, 1, 3)                          # (B,K,S,E)
+    flat = sel.reshape(b, k * s, ep)
+    pos = jnp.cumsum(flat, axis=1) - flat                       # pos within expert
+    keep = (pos < cap) * flat                                   # drop overflow
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    disp = pos_oh.reshape(b, k, s, ep, cap).transpose(0, 2, 3, 4, 1)
+    dispatch = disp.sum(-1)                                     # (B,S,E,C)
+    gates = gate_vals.transpose(0, 2, 1)[..., None, None]       # (B,K,S,1,1)
+    combine = (disp * gates.transpose(0, 2, 3, 4, 1)).sum(-1)   # (B,S,E,C)
+
+    dispatch = constrain(dispatch.astype(dt), "batch", "seq", "expert", None)
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x)             # (B,E,C,D)
+    xin = constrain(xin, "batch", "expert", None, None)
+    h2 = jnp.einsum("becd,edft->becft", xin, mp["wi"].astype(dt))
+    h = jax.nn.silu(h2[..., 0]) * h2[..., 1]
+    eo = jnp.einsum("becf,efd->becd", h, mp["wo"].astype(dt))   # (B,E,C,D)
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(dt), eo)
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e over real experts
+    frac = dispatch.astype(jnp.float32).sum((1, 3)) / max(s * cfg.top_k, 1)
+    pmean = probs.mean(1)                                       # (B,E)
+    aux = cfg.n_experts * jnp.mean((frac * pmean).sum(-1))
+    return constrain(y, "batch", "seq", None), aux
+
+
+# ---------------------------------------------------------------------------
+# SSM branch (Mamba2 SSD)
+# ---------------------------------------------------------------------------
+
+def _ssm_proj(sp: dict, x: jax.Array):
+    dt_ = x.dtype
+    xs = jnp.einsum("bsd,dhp->bshp", x, sp["in_x"].astype(dt_))
+    z = jnp.einsum("bsd,dhp->bshp", x, sp["in_z"].astype(dt_))
+    bmat = jnp.einsum("bsd,dn->bsn", x, sp["in_b"].astype(dt_))
+    cmat = jnp.einsum("bsd,dn->bsn", x, sp["in_c"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, sp["in_dt"].astype(dt_))
+    return xs, z, bmat, cmat, dt
+
+
+def _causal_conv(seq, w, tail=None):
+    """Depthwise causal conv. seq: (B,S,...) w: (W, ...); tail: (B,W-1,...)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((seq.shape[0], width - 1) + seq.shape[2:], seq.dtype)
+    full = jnp.concatenate([tail, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(width))
+    new_tail = full[:, -(width - 1):] if width > 1 else tail
+    return out, new_tail
+
+
+def _ssm_forward(sp: dict, x: jax.Array, cfg: ArchConfig, *, h0=None,
+                 conv_tail_x=None, conv_tail_bc=None):
+    """Full-sequence SSD. Returns (y (B,S,D), h_fin, tail_x, tail_bc)."""
+    xs, z, bmat, cmat, dt = _ssm_proj(sp, x)
+    dt_ = x.dtype
+    xs, tail_x = _causal_conv(xs, sp["conv_w"].astype(dt_), conv_tail_x)
+    xs = jax.nn.silu(xs)
+    bc = jnp.concatenate([bmat, cmat], axis=-1)
+    bc, tail_bc = _causal_conv(bc, sp["conv_bc_w"].astype(dt_), conv_tail_bc)
+    bc = jax.nn.silu(bc)
+    n = cfg.ssm_state
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + sp["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(sp["a_log"].astype(jnp.float32))
+    y, h_fin = ssd.ssd_scan(xs.astype(jnp.float32), dt, a,
+                            bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32),
+                            chunk=cfg.ssd_chunk, h0=h0)
+    y = y + sp["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32)))
+    y = rmsnorm(y, sp["gate_norm"]).astype(dt_)
+    out = jnp.einsum("bshp,hpd->bsd", y, sp["out"].astype(dt_))
+    return constrain(out, "batch", "seq", None), h_fin, tail_x, tail_bc
+
+
+def _ssm_decode(sp: dict, x: jax.Array, h, tail_x, tail_bc, cfg: ArchConfig):
+    """One-token SSD update; x (B,1,D). Returns (y, h, tail_x, tail_bc)."""
+    xs, z, bmat, cmat, dt = _ssm_proj(sp, x)
+    dt_ = x.dtype
+    xs, tail_x = _causal_conv(xs, sp["conv_w"].astype(dt_), tail_x)
+    xs = jax.nn.silu(xs)
+    bc = jnp.concatenate([bmat, cmat], axis=-1)
+    bc, tail_bc = _causal_conv(bc, sp["conv_bc_w"].astype(dt_), tail_bc)
+    bc = jax.nn.silu(bc)
+    n = cfg.ssm_state
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + sp["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(sp["a_log"].astype(jnp.float32))
+    y1, h = ssd.ssd_decode_step(h, xs[:, 0].astype(jnp.float32), dt[:, 0], a,
+                                bmat[:, 0].astype(jnp.float32),
+                                cmat[:, 0].astype(jnp.float32))
+    y1 = y1 + sp["d_skip"].astype(jnp.float32)[None, :, None] \
+        * xs[:, 0].astype(jnp.float32)
+    y1 = y1 * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    y1 = rmsnorm(y1, sp["gate_norm"]).astype(dt_)
+    out = jnp.einsum("bhp,hpd->bd", y1, sp["out"].astype(dt_))[:, None]
+    return out, h, tail_x, tail_bc
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+
+def _layer_train(lp: dict, x: jax.Array, cfg: ArchConfig):
+    """Full-sequence layer (train / prefill w/o cache emission)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, lp["ln1"])
+    mask_kind = "local" if cfg.window else "causal"
+    if cfg.family == "dense" or cfg.family == "moe":
+        y, _, _ = _attention(lp["attn"], h, cfg, mask_kind=mask_kind)
+        x = x + y
+    elif cfg.family == "ssm":
+        y, _, _, _ = _ssm_forward(lp["ssm"], h, cfg)
+        x = x + y
+    elif cfg.family == "hybrid":
+        ya, _, _ = _attention(lp["attn"], h, cfg, mask_kind=mask_kind)
+        ys, _, _, _ = _ssm_forward(lp["ssm"], h, cfg)
+        y = 0.5 * (rmsnorm(ya, lp["branch_norm_attn"])
+                   + rmsnorm(ys, lp["branch_norm_ssm"]))
+        x = x + y
+    if cfg.family == "moe":
+        h2 = rmsnorm(x, lp["ln2"])
+        y2, aux = _moe_ffn(lp["moe"], h2, cfg)
+        x = x + y2
+    elif cfg.family in ("dense", "hybrid"):
+        h2 = rmsnorm(x, lp["ln2"])
+        m = lp["mlp"]
+        dt = x.dtype
+        x = x + swiglu(h2, m["wi"].astype(dt), m["wo"].astype(dt))
+    return x, aux
+
+
+def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig):
+    """Like _layer_train but emits this layer's cache entries."""
+    cache = {}
+    h = rmsnorm(x, lp["ln1"])
+    mask_kind = "local" if cfg.window else "causal"
+    if cfg.family in ("dense", "moe", "hybrid"):
+        y, k, v = _attention(lp["attn"], h, cfg, mask_kind=mask_kind)
+        cache["k"], cache["v"] = k, v
+    if cfg.family in ("ssm", "hybrid"):
+        ys, hf, tx, tbc = _ssm_forward(lp["ssm"], h, cfg)
+        cache["ssm_h"], cache["conv_x"], cache["conv_bc"] = hf, tx, tbc
+    if cfg.family in ("dense", "moe"):
+        x = x + y
+    elif cfg.family == "ssm":
+        x = x + ys
+    else:
+        x = x + 0.5 * (rmsnorm(y, lp["branch_norm_attn"])
+                       + rmsnorm(ys, lp["branch_norm_ssm"]))
+    if cfg.family == "moe":
+        y2, _ = _moe_ffn(lp["moe"], rmsnorm(x, lp["ln2"]), cfg)
+        x = x + y2
+    elif cfg.family in ("dense", "hybrid"):
+        m = lp["mlp"]
+        dt = x.dtype
+        x = x + swiglu(rmsnorm(x, lp["ln2"]), m["wi"].astype(dt),
+                       m["wo"].astype(dt))
+    return x, cache
+
+
+def _layer_decode(lp: dict, cache_l: dict, x: jax.Array, lengths,
+                  cfg: ArchConfig):
+    new_cache = dict(cache_l)
+    h = rmsnorm(x, lp["ln1"])
+    if cfg.family in ("dense", "moe", "hybrid"):
+        y, kc, vc = _attention_decode(lp["attn"], h, cache_l["k"],
+                                      cache_l["v"], lengths, cfg)
+        new_cache["k"], new_cache["v"] = kc, vc
+    if cfg.family in ("ssm", "hybrid"):
+        ys, hs, tx, tbc = _ssm_decode(lp["ssm"], h, cache_l["ssm_h"],
+                                      cache_l["conv_x"], cache_l["conv_bc"],
+                                      cfg)
+        new_cache["ssm_h"], new_cache["conv_x"] = hs, tx
+        new_cache["conv_bc"] = tbc
+    if cfg.family in ("dense", "moe"):
+        x = x + y
+    elif cfg.family == "ssm":
+        x = x + ys
+    else:
+        x = x + 0.5 * (rmsnorm(y, lp["branch_norm_attn"])
+                       + rmsnorm(ys, lp["branch_norm_ssm"]))
+    if cfg.family == "moe":
+        y2, _ = _moe_ffn(lp["moe"], rmsnorm(x, lp["ln2"]), cfg)
+        x = x + y2
+    elif cfg.family in ("dense", "hybrid"):
+        m = lp["mlp"]
+        dt = x.dtype
+        x = x + swiglu(rmsnorm(x, lp["ln2"]), m["wi"].astype(dt),
+                       m["wo"].astype(dt))
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Full-model entry points
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, tokens, frontend, cfg: ArchConfig):
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens).astype(dt)
+    # float(): a NUMPY scalar is strongly typed and silently promotes the
+    # whole residual stream to f32 (doubled every activation byte and
+    # collective model-wide — EXPERIMENTS.md §Perf iteration 3).
+    x = x * float(np.sqrt(cfg.d_model))
+    if frontend is not None:
+        x = jnp.concatenate([frontend.astype(dt), x], axis=1)
+    return constrain(x, "batch", "seq", None)
+
+
+def _compute_layers(params, cfg: ArchConfig):
+    """Cast stacked layer weights to the compute dtype BEFORE the scan so the
+    per-layer FSDP all-gather moves bf16, not the fp32 master copy (halves
+    the dominant collective in the train roofline).
+
+    The cast copy is re-pinned to the parameter shardings. This matters for
+    the BACKWARD pass: ``with_sharding_constraint`` is self-transposing, so
+    the cotangent (the layer-scan transpose's gradient accumulator) inherits
+    the same sharding — without it GSPMD materializes FULL per-device
+    stacked gradients (measured 549 GB/device on command-r; §Perf iter 1)."""
+    dt = jnp.dtype(cfg.dtype)
+    casted = jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params["layers"])
+    ctx = dshard.get_active_mesh()
+    if ctx is None:
+        return casted
+    mesh, rules = ctx
+    from jax.sharding import NamedSharding
+    from repro.models.common import stack_layers
+    tmpl = stack_layers(_layer_template(cfg), cfg.n_layers)
+
+    def pin(x, pdef):
+        spec = dshard.spec_for(pdef.axes, mesh, rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(pin, casted, tmpl)
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig, frontend=None):
+    """Embed + layer scan + final norm. Returns (hidden (B,S,D), aux)."""
+    x = _embed_in(params, tokens, frontend, cfg)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_train(lp, x, cfg)
+        return (x, aux + a), None
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               _compute_layers(params, cfg),
+                               unroll=flags.scan_unroll(cfg.n_layers))
+    return rmsnorm(x, params["final_norm"]), aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """Next-token CE (+ MoE aux) over the token region (frontend excluded)."""
+    frontend = batch.get("frontend")
+    hid, aux = forward_hidden(params, batch["tokens"], cfg, frontend)
+    if frontend is not None:
+        hid = hid[:, frontend.shape[1]:]
+    logits = unembed_logits(hid, params["embed"].astype(hid.dtype))
+    ce = cross_entropy_loss(logits, batch["labels"], cfg.vocab)
+    return ce + 0.01 * aux
+
+
+def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None):
+    """Run the prompt; return (last-position logits, cache).
+
+    The cache is allocated at ``max_len`` (>= prompt length + decode budget)
+    or at ``window`` for sliding-window attention (ring buffer).
+    """
+    tokens = batch["tokens"]
+    frontend = batch.get("frontend")
+    b, s = tokens.shape
+    total = s + (frontend.shape[1] if frontend is not None else 0)
+    max_len = max_len or total
+    x = _embed_in(params, tokens, frontend, cfg)
+
+    def body(x, lp):
+        x, cache_l = _layer_prefill(lp, x, cfg)
+        return x, cache_l
+
+    x, caches = jax.lax.scan(body, x, _compute_layers(params, cfg),
+                             unroll=flags.scan_unroll(cfg.n_layers))
+    hid = rmsnorm(x, params["final_norm"])
+    logits = unembed_logits(hid[:, -1:], params["embed"].astype(hid.dtype))
+
+    cache = {"length": jnp.full((b,), total, jnp.int32)}
+    if "k" in caches:
+        sc = cfg.window if (cfg.window and cfg.window < max_len) else max_len
+        k, v = caches["k"], caches["v"]          # (L,B,S,KV,hd)
+        if sc >= total:
+            pad = sc - total
+            cache["k"] = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["v"] = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        else:                                    # ring: keep last window, rolled
+            tail_k, tail_v = k[:, :, -sc:], v[:, :, -sc:]
+            shift = total % sc                   # slot of position `total-sc`
+            cache["k"] = jnp.roll(tail_k, shift, axis=2)
+            cache["v"] = jnp.roll(tail_v, shift, axis=2)
+    for key in ("ssm_h", "conv_x", "conv_bc"):
+        if key in caches:
+            cache[key] = caches[key]
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig):
+    """One decode step. tokens: (B, 1) — appended at position cache.length."""
+    lengths = cache["length"] + 1                # position of the new token +1
+    x = _embed_in(params, tokens, None, cfg)
+
+    layer_cache = {k: cache[k] for k in
+                   ("k", "v", "ssm_h", "conv_x", "conv_bc") if k in cache}
+
+    def body(x, inp):
+        lp, cl = inp
+        x, ncl = _layer_decode(lp, cl, x, lengths, cfg)
+        return x, ncl
+
+    x, new_layer_cache = jax.lax.scan(body, x,
+                                      (_compute_layers(params, cfg),
+                                       layer_cache),
+                                      unroll=flags.scan_unroll(cfg.n_layers))
+    hid = rmsnorm(x, params["final_norm"])
+    logits = unembed_logits(hid, params["embed"].astype(hid.dtype))
+    new_cache = dict(cache)
+    new_cache.update(new_layer_cache)
+    new_cache["length"] = lengths
+    return logits, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               length: int = 0) -> dict:
+    """Empty cache pytree (zeros) for decode-only dry-runs and serving."""
+    dt = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    cache = {"length": jnp.full((batch,), length, jnp.int32)}
+    if cfg.family in ("dense", "moe", "hybrid"):
+        sc = cfg.window if (cfg.window and cfg.window < max_len) else max_len
+        kvp, hd = cfg.kv_heads_padded, cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((l, batch, sc, kvp, hd), dt)
+        cache["v"] = jnp.zeros((l, batch, sc, kvp, hd), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        hs, p, n = cfg.ssm_heads_padded, cfg.ssm_head_dim, cfg.ssm_state
+        w = cfg.conv_width
+        cache["ssm_h"] = jnp.zeros((l, batch, hs, p, n), jnp.float32)
+        cache["conv_x"] = jnp.zeros((l, batch, w - 1, hs, p), dt)
+        cache["conv_bc"] = jnp.zeros((l, batch, w - 1, 2 * n), dt)
+    return cache

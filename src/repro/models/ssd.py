@@ -1,0 +1,112 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan + decode step.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks of length Q; within a chunk the output is the quadratic
+"1-semiseparable attention" form, across chunks a linear recurrence carries
+the (H, P, N) state. This is the sub-quadratic path that makes the
+``long_500k`` cell runnable for SSM/hybrid archs.
+
+Connection to the paper (DESIGN.md §Arch-applicability): the SSD decay mask
+``L_ij = exp(sum_{j<t<=i} dt_t a)`` is itself a *structured low-rank* masked
+attention surrogate — but there are no q k^T logits to add a FlashBias term
+to, so the paper's technique is N/A for this family and the arch is built
+without it.
+
+Layout: x (B, S, H, P) heads/headdim; B, C (B, S, N) (ngroups=1);
+dt (B, S, H); a (H,) negative decay rates. State h (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+
+from repro.dist import sharding as dshard
+
+__all__ = ["ssd_scan", "ssd_decode_step"]
+
+
+def _chunk_cumsum(dta):
+    """Inclusive cumsum of dt*a within each chunk. dta: (B, nc, Q, H)."""
+    return jnp.cumsum(dta, axis=2)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 256,
+             h0: jax.Array | None = None):
+    """Chunked SSD forward.
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus'd, >0); a: (H,) < 0;
+    b, c: (B, S, N). Returns (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n)
+    cc = c.reshape(bsz, nc, q, n)
+
+    dta = dtc * a[None, None, None, :]                  # (B,nc,Q,H) <= 0
+    cum = _chunk_cumsum(dta)                            # inclusive
+    # Intra-chunk quadratic ("attention") term:
+    #   y_i += sum_{j<=i} (c_i . b_j) exp(cum_i - cum_j) dt_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # (B,nc,Qi,Qj)
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]    # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # Chunk summaries: contribution of each chunk to the carried state
+    #   state_c = sum_j exp(cum_last - cum_j) dt_j  b_j (x) x_j
+    last = cum[:, :, -1:, :]                             # (B,nc,1,H)
+    sdec = jnp.exp(last - cum)                           # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqhp,bcqn->bchpn",
+                        sdec * dtc, xc, bc)              # (B,nc,H,P,N)
+    # Whole-chunk decay factor
+    chunk_decay = jnp.exp(last[:, :, 0, :])              # (B,nc,H)
+
+    # Inter-chunk recurrence (sequential over chunks)
+    def step(hprev, inp):
+        st, dec = inp                                    # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev                               # emit state BEFORE chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), x.dtype)
+    h_fin, h_prevs = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=flags.scan_unroll(nc))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,P,N)
+
+    # Inter-chunk output: y_i += (c_i . h_prev) decayed to position i
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(cum), cc, h_prevs)
+    y = (y_intra + y_inter).reshape(bsz, nc * q, h, p)
+    y = dshard.constrain(y, "batch", "seq", "heads", None)
+    return y[:, :s], h_fin
+
+
+def ssd_decode_step(h: jax.Array, x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b: jax.Array, c: jax.Array):
+    """One-token SSD update.
+
+    h: (B,H,P,N) state; x: (B,H,P); dt: (B,H); b, c: (B,N).
+    Returns (y (B,H,P), h_new).
+    """
+    da = jnp.exp(dt * a[None, :])                        # (B,H)
+    dbx = jnp.einsum("bh,bhp,bn->bhpn", dt, x, b)
+    h_new = h * da[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c)
+    return y, h_new

@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW (sharded states), schedules, grad utilities."""
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedules import constant, cosine, wsd
+
+__all__ = ["AdamW", "OptState", "constant", "cosine", "wsd"]

@@ -1,0 +1,99 @@
+"""AdamW with fp32 master state, global-norm clipping, and optional
+bf16 gradient compression with error feedback.
+
+Sharding: optimizer states mirror the parameter shardings (ZeRO-1/2
+equivalent under GSPMD — each device keeps only its shard of mu/nu because
+``train_step``'s out_shardings pin them to the param specs).
+
+Gradient compression (``compress_grads=True``): the gradient crossing the
+data-parallel reduction boundary is cast to bf16; the fp32 residual is kept
+in an error-feedback buffer and added back next step, so the *long-run*
+update is unbiased while the all-reduce moves half the bytes. On TPU the
+cast fuses into the reduce-scatter producer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    mu: dict
+    nu: dict
+    err: Optional[dict] = None      # error-feedback residuals
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu, self.err), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False
+
+    def init(self, params) -> OptState:
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        err = zeros() if self.compress_grads else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(),
+                        nu=zeros(), err=err)
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        new_err = state.err
+        if self.compress_grads:
+            # error feedback: compress (grad + residual), keep the remainder
+            summed = jax.tree.map(lambda g, e: g + e, grads, state.err)
+            compressed = jax.tree.map(
+                lambda s: s.astype(jnp.bfloat16).astype(jnp.float32), summed)
+            new_err = jax.tree.map(lambda s, c: s - c, summed, compressed)
+            grads = compressed
+
+        # NOTE: jnp.vdot(g, g) flattens first — a reshape that merges sharded
+        # dims is unshardable, so GSPMD all-gathers the ENTIRE gradient to
+        # compute the norm (measured: 106 GB f32 gathers on command-r;
+        # EXPERIMENTS.md §Perf iteration 1). Elementwise square + reduce
+        # shards cleanly.
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        lr = self.lr_fn(state.step)
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: self.b2 * n + (1 - self.b2) * g * g,
+                          state.nu, grads)
+
+        def upd(p, m, n):
+            mh = m / (1 - self.b1 ** tf)
+            nh = n / (1 - self.b2 ** tf)
+            step = mh / (jnp.sqrt(nh) + self.eps)
+            if p.ndim >= 2:   # decay matrices only (standard practice)
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, OptState(t, mu, nu, new_err), metrics

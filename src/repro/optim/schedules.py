@@ -1,0 +1,39 @@
+"""LR schedules as pure ``step -> lr`` callables (traceable).
+
+``wsd`` is the warmup-stable-decay schedule MiniCPM trains with
+(arXiv:2404.06395): linear warmup, long flat stage, short exponential-ish
+decay tail — selected by the minicpm-2b config.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine", "wsd"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio * lr + (1 - min_ratio) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM). Decay tail: exponential to min_ratio."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * (min_ratio ** t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, lr, dec))
+        return out.astype(jnp.float32)
+    return f

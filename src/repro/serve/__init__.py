@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill + decode engine over cache pytrees."""
+from repro.serve.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

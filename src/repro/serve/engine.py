@@ -1,0 +1,58 @@
+"""Batched serving engine: prefill once, decode greedily against the cache.
+
+Cache kinds (all pytrees, all jit-traceable):
+
+- full KV            (dense/moe archs)        — (L, B, S_max, KV, hd),
+- ring KV            (sliding-window archs)   — (L, B, window, KV, hd),
+- SSM state + conv   (ssm/hybrid archs)       — constant size.
+
+``serve_step`` (= one decode step) is what the decode-shaped dry-run cells
+lower; the engine is the runnable wrapper around it (examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+__all__ = ["ServeEngine"]
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Model
+    params: dict
+    max_len: int = 1024
+    eos_id: int = -1          # -1: never stop early
+
+    def __post_init__(self):
+        self._decode = jax.jit(self.model.decode)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 frontend: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, T) int32 (same-length; pad upstream). Greedy decode.
+
+        Returns (B, max_new_tokens) generated ids.
+        """
+        batch = {"tokens": jnp.asarray(prompts)}
+        if frontend is not None:
+            batch["frontend"] = jnp.asarray(frontend)
+        logits, cache = self.model.prefill(self.params, batch,
+                                           max_len=self.max_len)
+        b = prompts.shape[0]
+        out = np.zeros((b, max_new_tokens), np.int32)
+        done = np.zeros((b,), bool)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        for i in range(max_new_tokens):
+            out[:, i] = np.where(done, self.eos_id, np.asarray(tok[:, 0]))
+            done |= np.asarray(tok[:, 0]) == self.eos_id
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return out

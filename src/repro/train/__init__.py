@@ -1,0 +1,5 @@
+"""Training substrate: step factory + fault-tolerant loop."""
+from repro.train.loop import TrainLoop
+from repro.train.step import make_train_step
+
+__all__ = ["make_train_step", "TrainLoop"]

@@ -1,0 +1,106 @@
+"""Fault-tolerant training loop.
+
+Scale features (DESIGN.md §Fault tolerance):
+
+- **Checkpoint/restart**: periodic saves + save-on-SIGTERM (preemption);
+  ``TrainLoop.run`` first restores the latest checkpoint if one exists, so a
+  crashed/preempted job resumes bit-exactly (data pipeline is stateless-
+  indexed — the restored integer step is the full iterator state).
+- **Straggler watchdog**: per-step wall times tracked; steps slower than
+  ``straggler_factor x`` the running median are counted and surfaced in
+  metrics. In a synchronous SPMD job a persistent straggler cannot be
+  dropped mid-run — the mitigation path is an early checkpoint + re-mesh
+  (elastic restore onto the healthy node set), which the watchdog triggers
+  via ``on_straggler``.
+- **Metrics**: JSONL per step (loss, grad-norm, lr, wall time, stragglers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["TrainLoop"]
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    train_step: Callable                 # (params, opt, batch) -> (params, opt, metrics)
+    data_fn: Callable[[int], dict]      # step -> batch (stateless)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_n: int = 3
+    log_path: Optional[str] = None
+    straggler_factor: float = 3.0
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    def run(self, params, opt_state, num_steps: int, *, start_step: int = 0,
+            shardings=None):
+        """Run up to ``num_steps`` total steps; resumes from checkpoints."""
+        step = start_step
+        if self.ckpt_dir and latest_step(self.ckpt_dir) is not None:
+            (params, opt_state), extras = restore_checkpoint(
+                self.ckpt_dir, None, (params, opt_state), shardings=shardings)
+            step = int(extras["step"]) + 1
+
+        preempted = {"flag": False}
+
+        def _sigterm(signum, frame):       # preemption notice
+            preempted["flag"] = True
+
+        prev_handler = signal.signal(signal.SIGTERM, _sigterm)
+        times: list[float] = []
+        stragglers = 0
+        log_f = open(self.log_path, "a") if self.log_path else None
+        try:
+            while step < num_steps:
+                t0 = time.monotonic()
+                batch = self.data_fn(step)
+                params, opt_state, metrics = self.train_step(
+                    params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.monotonic() - t0
+
+                if len(times) >= 5:
+                    med = float(np.median(times[-50:]))
+                    if dt > self.straggler_factor * med:
+                        stragglers += 1
+                        if self.on_straggler:
+                            self.on_straggler(step, dt / med)
+                times.append(dt)
+
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec.update(step=step, wall_s=dt, stragglers=stragglers)
+                if log_f:
+                    log_f.write(json.dumps(rec) + "\n")
+                    log_f.flush()
+
+                must_save = (self.ckpt_dir and
+                             ((step + 1) % self.ckpt_every == 0
+                              or preempted["flag"]
+                              or step + 1 == num_steps))
+                if must_save:
+                    save_checkpoint(self.ckpt_dir, step,
+                                    (params, opt_state),
+                                    extras={"step": step}, keep_n=self.keep_n)
+                if preempted["flag"]:
+                    break
+                step += 1
+        finally:
+            signal.signal(signal.SIGTERM, prev_handler)
+            if log_f:
+                log_f.close()
+
+        p50 = float(np.median(times)) if times else 0.0
+        p99 = float(np.percentile(times, 99)) if times else 0.0
+        return params, opt_state, {
+            "final_step": step, "p50_s": p50, "p99_s": p99,
+            "stragglers": stragglers, "preempted": preempted["flag"]}

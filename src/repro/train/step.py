@@ -1,0 +1,88 @@
+"""Train-step factory: loss -> jitted (params, opt_state, batch) update.
+
+- **Microbatch gradient accumulation** via ``lax.scan`` over a leading
+  microbatch axis — the scan structure lets XLA overlap the FSDP all-gather
+  of the next microbatch's layer weights with the current compute.
+- **Donation** of params/opt_state buffers (in-place update on device).
+- Works identically under a mesh (pjit'd by shardings on the arguments) and
+  on a single CPU device (tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(loss_fn: Callable, optimizer: AdamW, *,
+                    grad_accum: int = 1, jit: bool = True,
+                    in_shardings=None, out_shardings=None,
+                    donate: bool = True, grad_shardings=None):
+    """loss_fn(params, batch) -> scalar. Returns step(params, opt, batch).
+
+    With ``grad_accum > 1`` the batch's leading axis must be divisible by it;
+    the batch is reshaped to (A, B/A, ...) and grads averaged over A.
+
+    ``grad_shardings`` (pytree of NamedSharding mirroring params): constrain
+    gradients to the parameter shardings before the optimizer update. Under
+    FSDP this turns the data-parallel gradient all-reduce into a
+    reduce-scatter (each device reduces only its parameter shard — ZeRO-2):
+    without the constraint GSPMD materializes FULL per-device gradients
+    (416 GB/device for command-r-plus; see EXPERIMENTS.md §Perf).
+    """
+
+    def constrain_grads(grads):
+        if grad_shardings is None:
+            return grads
+        # Constrain INSIDE the accumulation so each microbatch's gradient is
+        # reduce-scattered into a sharded accumulator; constraining only the
+        # final result leaves a full-size (replicated) carry and changes
+        # nothing (measured: EXPERIMENTS.md §Perf iteration 1).
+        return jax.lax.with_sharding_constraint(grads, grad_shardings)
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, constrain_grads(grads)
+
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), b)
+
+        microbatches = micro(batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(jnp.add, grad_acc, constrain_grads(grads))
+            grad_acc = constrain_grads(grad_acc)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = constrain_grads(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), microbatches)
+        inv = 1.0 / grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        params, opt_state, metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    if not jit:
+        return step
+    kwargs = {}
+    if in_shardings is not None:
+        kwargs["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kwargs["out_shardings"] = out_shardings
+    return jax.jit(step, donate_argnums=(0, 1) if donate else (), **kwargs)

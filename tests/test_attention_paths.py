@@ -1,0 +1,116 @@
+"""Attention execution paths agree: dense == chunked == Eq.3 concat == kernel
+wrapper, across masks, GQA, factored bias, dense bias, kv_length."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.attention as A
+import repro.core.bias as bias_mod
+from repro.core.attention import MaskSpec
+from repro.kernels import ref
+
+
+def _mk(key, b, n, m, h, kvh, d):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, n, h, d))
+    k = jax.random.normal(ks[1], (b, m, kvh, d))
+    v = jax.random.normal(ks[2], (b, m, kvh, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("kvh", [1, 2, 8])
+@pytest.mark.parametrize("mask", ["none", "causal", "local"])
+def test_dense_vs_chunked(kvh, mask):
+    q, k, v = _mk(jax.random.PRNGKey(0), 2, 40, 40, 8, kvh, 16)
+    ms = MaskSpec(mask, 12 if mask == "local" else 0)
+    o1 = A.attention(q, k, v, mask=ms, impl="dense")
+    o2 = A.attention(q, k, v, mask=ms, impl="chunked", chunk_size=16)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+def test_factored_bias_equals_dense_bias():
+    h = 8
+    q, k, v = _mk(jax.random.PRNGKey(1), 2, 32, 32, h, 4, 16)
+    pq, pk = bias_mod.alibi_factors(32, 32, h)
+    o_f = A.attention(q, k, v, impl="chunked", chunk_size=8,
+                      phi_q=bias_mod.broadcast_factors(pq, 2, 32, h),
+                      phi_k=bias_mod.broadcast_factors(pk, 2, 32, h))
+    o_d = A.attention(q, k, v, impl="dense",
+                      bias=bias_mod.alibi_dense(32, 32, h)[None])
+    np.testing.assert_allclose(o_f, o_d, atol=2e-5)
+
+
+def test_eq3_concat_identity():
+    """The paper's core identity (Eq. 3): biased attention == standard
+    attention over C+R channels."""
+    h, d = 4, 16
+    q, k, v = _mk(jax.random.PRNGKey(2), 2, 24, 24, h, 2, d)
+    pq, pk = bias_mod.alibi_factors(24, 24, h)
+    pq4 = bias_mod.broadcast_factors(pq, 2, 24, h)
+    pk1 = bias_mod.broadcast_factors(pk, 2, 24, 1)
+    q_aug, k_aug = A.flashbias_concat_qk(q, k, pq4, pk1)
+    assert q_aug.shape[-1] == d + 2
+    o_concat = A.attention(q_aug, k_aug, v, impl="dense",
+                           scale=1.0 / np.sqrt(d))
+    o_bias = A.attention(q, k, v, impl="dense",
+                         bias=bias_mod.alibi_dense(24, 24, h)[None])
+    np.testing.assert_allclose(o_concat, o_bias, atol=2e-5)
+
+
+def test_kv_length_masks_tail():
+    q, k, v = _mk(jax.random.PRNGKey(3), 2, 4, 32, 4, 4, 8)
+    o_len = A.attention(q, k, v, impl="chunked", chunk_size=8,
+                        kv_length=jnp.array([20, 32]))
+    o_trunc0 = A.attention(q[:1], k[:1, :20], v[:1, :20], impl="dense")
+    np.testing.assert_allclose(o_len[0], o_trunc0[0], atol=2e-5)
+
+
+def test_q_offset_decode_row():
+    """Row t of full causal attention == decode with q_offset=t."""
+    q, k, v = _mk(jax.random.PRNGKey(4), 1, 16, 16, 2, 2, 8)
+    full = A.attention(q, k, v, mask=MaskSpec("causal"), impl="dense")
+    row = A.attention(q[:, 10:11], k, v, mask=MaskSpec("causal"),
+                      impl="chunked", chunk_size=4, q_offset=10)
+    np.testing.assert_allclose(row[:, 0], full[:, 10], atol=2e-5)
+
+
+def test_multiplicative_extension():
+    """App. I Eq. 17: channel expansion computes softmax((qk^T) o b) v."""
+    h, d, n = 2, 8, 12
+    q, k, v = _mk(jax.random.PRNGKey(5), 1, n, n, h, h, d)
+    pq, pk = bias_mod.cos_relpos_factors(n, n)
+    pq4 = bias_mod.broadcast_factors(pq, 1, n, h)
+    pk4 = bias_mod.broadcast_factors(pk, 1, n, h)
+    o = A.multiplicative_flashbias_attention(q, k, v, pq4, pk4)
+    bm = bias_mod.cos_relpos_dense(n, n)
+    s = jnp.einsum("bnhd,bmhd->bhnm", q, k) / np.sqrt(d) * bm[None, None]
+    o_ref = jnp.einsum("bhnm,bmhd->bnhd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 24), h=st.integers(1, 4), d=st.sampled_from([4, 8]),
+       chunk=st.sampled_from([4, 8, 16]))
+def test_property_chunked_matches_oracle(n, h, d, chunk):
+    """Chunked online-softmax == dense oracle for random shapes/chunks."""
+    key = jax.random.PRNGKey(n * 100 + h * 10 + d)
+    q, k, v = _mk(key, 1, n, n, h, h, d)
+    o1 = A.attention(q, k, v, mask=MaskSpec("causal"), impl="chunked",
+                     chunk_size=chunk)
+    o2 = ref.mha_reference(q, k, v, mask_kind="causal")
+    np.testing.assert_allclose(o1, o2, atol=3e-5)
+
+
+def test_softmax_invariance_property():
+    """Adding any rank-1 bias constant over keys leaves outputs unchanged
+    (softmax shift invariance) — a system invariant FlashBias must respect."""
+    h, n = 2, 16
+    q, k, v = _mk(jax.random.PRNGKey(6), 1, n, n, h, h, 8)
+    pq = jnp.ones((1, n, h, 1)) * 3.7            # constant-per-query bias
+    pk = jnp.ones((1, n, h, 1))
+    o_b = A.attention(q, k, v, impl="chunked", chunk_size=4,
+                      phi_q=pq, phi_k=pk)
+    o_0 = A.attention(q, k, v, impl="chunked", chunk_size=4)
+    np.testing.assert_allclose(o_b, o_0, atol=2e-5)

@@ -1,0 +1,64 @@
+"""SVD + neural decompositions (Table 1 rows b, c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.decomp as dc
+from repro.core.bias import sqdist_dense
+
+
+class TestSVD:
+    def test_full_rank_is_exact(self):
+        t = jax.random.normal(jax.random.PRNGKey(0), (3, 24, 24))
+        pq, pk = dc.svd_factors(t, rank=24)
+        assert dc.reconstruction_error(t, pq, pk) < 1e-5
+
+    def test_truncation_is_eckart_young_optimal(self):
+        """Rank-r SVD error == sqrt(sum of discarded sigma^2)."""
+        t = jax.random.normal(jax.random.PRNGKey(1), (16, 16))
+        s = jnp.linalg.svd(t, compute_uv=False)
+        r = 4
+        pq, pk = dc.svd_factors(t, rank=r)
+        want = float(jnp.sqrt((s[r:] ** 2).sum()) / jnp.linalg.norm(t))
+        got = dc.reconstruction_error(t, pq, pk)
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_energy_rank_selection(self):
+        u = jax.random.normal(jax.random.PRNGKey(2), (32, 5))
+        t = u @ u.T          # exact rank 5
+        pq, pk = dc.svd_factors(t, rank=None, energy=0.999)
+        assert pq.shape[-1] <= 5
+        assert dc.reconstruction_error(t, pq, pk) < 1e-3
+
+    def test_per_head_batched(self):
+        t = jax.random.normal(jax.random.PRNGKey(3), (4, 12, 12))
+        pq, pk = dc.svd_factors(t, rank=12)
+        assert pq.shape == (4, 12, 12) and pk.shape == (4, 12, 12)
+
+
+class TestNeuralDecomposition:
+    def test_fit_recovers_low_rank_bias(self):
+        """Eq. 5 training drives reconstruction loss down on sqdist bias
+        (App. G-style target)."""
+        key = jax.random.PRNGKey(0)
+        params = dc.neural_decomp_init(key, 2, 2, hidden=32, heads=1, rank=8)
+
+        def sample(k):
+            xq = jax.random.uniform(k, (24, 2))
+            target = sqdist_dense(xq, xq)[None]      # (1, N, N)
+            return xq, xq, target
+
+        fitted, losses = dc.fit_neural_decomposition(
+            key, params, sample, steps=150, lr=3e-3)
+        assert float(losses[-1]) < 0.3 * float(losses[:10].mean())
+
+    def test_factors_are_tokenwise(self):
+        """Remark 3.6: phi depends only on its own token's features — a
+        permutation of inputs permutes outputs identically."""
+        key = jax.random.PRNGKey(1)
+        params = dc.neural_decomp_init(key, 3, 3, hidden=16, heads=2, rank=4)
+        x = jax.random.normal(key, (10, 3))
+        pq, _ = dc.neural_decomp_apply(params, x, x)
+        perm = jnp.array([3, 1, 4, 0, 2, 9, 8, 7, 5, 6])
+        pq_p, _ = dc.neural_decomp_apply(params, x[perm], x[perm])
+        np.testing.assert_allclose(pq[perm], pq_p, atol=1e-6)

@@ -1,0 +1,146 @@
+"""Pallas kernel sweeps (interpret=True on CPU) vs the pure-jnp oracle.
+
+Per the assignment: for each kernel, sweep shapes/dtypes and assert_allclose
+against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.bias as bias_mod
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+def _mk(key, b, n, m, h, kvh, d, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, n, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, m, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, m, kvh, d), dtype)
+    return q, k, v
+
+
+class TestFlashBiasAttnKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("b,n,h,kvh,d", [
+        (1, 32, 4, 4, 16),     # MHA aligned
+        (2, 48, 8, 2, 24),     # GQA, unaligned seq + channel
+        (1, 17, 2, 1, 8),      # ragged seq (padding path)
+        (1, 64, 6, 3, 160),    # head_dim > 128 (stablelm-style)
+    ])
+    def test_phi_causal(self, dtype, b, n, h, kvh, d):
+        q, k, v = _mk(jax.random.PRNGKey(0), b, n, n, h, kvh, d, dtype)
+        pq, pk = bias_mod.alibi_factors(n, n, h, dtype=jnp.float32)
+        pq4 = bias_mod.broadcast_factors(pq, b, n, h)
+        pk4 = bias_mod.broadcast_factors(pk, b, n, h)
+        out = ops.flash_attention(q, k, v, pq4, pk4, mask_kind="causal",
+                                  impl="pallas_interpret",
+                                  block_q=16, block_k=16)
+        want = ref.mha_reference(q, k, v, phi_q=pq4, phi_k=pk4,
+                                 mask_kind="causal")
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=ATOL[dtype])
+
+    @pytest.mark.parametrize("mask", ["none", "causal", "local"])
+    def test_masks_match(self, mask):
+        q, k, v = _mk(jax.random.PRNGKey(1), 1, 48, 48, 4, 4, 16, jnp.float32)
+        out = ops.flash_attention(q, k, v, mask_kind=mask, window=16,
+                                  impl="pallas_interpret",
+                                  block_q=16, block_k=16)
+        want = ref.mha_reference(q, k, v, mask_kind=mask, window=16)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_alibi_in_kernel_jit_generation(self):
+        """App. C: slopes-only mode generates the rank-2 bias in-kernel."""
+        h = 8
+        q, k, v = _mk(jax.random.PRNGKey(2), 2, 32, 32, h, 4, 16, jnp.float32)
+        slopes = bias_mod.alibi_slopes(h)
+        out = ops.flash_attention(q, k, v, slopes=slopes, mask_kind="causal",
+                                  impl="pallas_interpret",
+                                  block_q=16, block_k=16)
+        pq, pk = bias_mod.alibi_factors(32, 32, h)
+        want = ref.mha_reference(
+            q, k, v, phi_q=bias_mod.broadcast_factors(pq, 2, 32, h),
+            phi_k=bias_mod.broadcast_factors(pk, 2, 32, h),
+            mask_kind="causal")
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_gradients_match_reference(self):
+        q, k, v = _mk(jax.random.PRNGKey(3), 1, 32, 32, 4, 2, 16, jnp.float32)
+        pq, pk = bias_mod.alibi_factors(32, 32, 4)
+        pq4 = bias_mod.broadcast_factors(pq, 1, 32, 4)
+        pk4 = bias_mod.broadcast_factors(pk, 1, 32, 4)
+
+        def f_kernel(q, pq4):
+            return ops.flash_attention(q, k, v, pq4, pk4, mask_kind="causal",
+                                       impl="pallas_interpret", block_q=16,
+                                       block_k=16).sum()
+
+        def f_ref(q, pq4):
+            return ref.mha_reference(q, k, v, phi_q=pq4, phi_k=pk4,
+                                     mask_kind="causal").sum()
+
+        g1 = jax.grad(f_kernel, argnums=(0, 1))(q, pq4)
+        g2 = jax.grad(f_ref, argnums=(0, 1))(q, pq4)
+        np.testing.assert_allclose(g1[0], g2[0], atol=5e-5)
+        np.testing.assert_allclose(g1[1], g2[1], atol=5e-4)
+
+    def test_xla_and_kernel_paths_agree(self):
+        q, k, v = _mk(jax.random.PRNGKey(4), 1, 40, 40, 4, 4, 16, jnp.float32)
+        slopes = bias_mod.alibi_slopes(4)
+        a = ops.flash_attention(q, k, v, slopes=slopes, mask_kind="causal",
+                                impl="xla")
+        b = ops.flash_attention(q, k, v, slopes=slopes, mask_kind="causal",
+                                impl="pallas_interpret", block_q=8, block_k=8)
+        np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+class TestFlashDecodeKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("b,s,h,kvh,d,blk", [
+        (2, 64, 8, 4, 16, 16),
+        (1, 96, 4, 1, 32, 32),
+        (3, 40, 6, 2, 24, 8),    # ragged cache length
+    ])
+    def test_alibi_decode(self, dtype, b, s, h, kvh, d, blk):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (b, 1, h, d), dtype)
+        kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, d), dtype)
+        vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, d), dtype)
+        lengths = jnp.asarray(
+            np.random.RandomState(0).randint(1, s + 1, (b,)), jnp.int32)
+        slopes = bias_mod.alibi_slopes(h)
+        out = ops.flash_decode(q, kc, vc, lengths, slopes=slopes,
+                               impl="pallas_interpret", block_k=blk)
+        want = ref.decode_reference(q, kc, vc, lengths, slopes=slopes)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=ATOL[dtype])
+
+    def test_phi_decode(self):
+        b, s, h, kvh, d, r = 2, 48, 4, 2, 16, 5
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, d))
+        kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, d))
+        vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, d))
+        pq = jax.random.normal(jax.random.PRNGKey(3), (b, 1, h, r))
+        pk = jax.random.normal(jax.random.PRNGKey(4), (b, s, 1, r))
+        lengths = jnp.array([31, 48], jnp.int32)
+        out = ops.flash_decode(q, kc, vc, lengths, pq, pk,
+                               impl="pallas_interpret", block_k=16)
+        want = ref.decode_reference(q, kc, vc, lengths, phi_q=pq, phi_k=pk)
+        np.testing.assert_allclose(out, want, atol=2e-5)
+
+    def test_xla_decode_matches_oracle(self):
+        b, s, h, kvh, d = 2, 64, 8, 4, 16
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, 1, h, d))
+        kc = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, d))
+        vc = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, d))
+        lengths = jnp.array([10, 64], jnp.int32)
+        slopes = bias_mod.alibi_slopes(h)
+        out = ops.flash_decode(q, kc, vc, lengths, slopes=slopes, impl="xla",
+                               block_k=16)
+        want = ref.decode_reference(q, kc, vc, lengths, slopes=slopes)
+        np.testing.assert_allclose(out, want, atol=2e-5)
