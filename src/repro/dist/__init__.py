@@ -1,0 +1,36 @@
+"""repro.dist — the sharding layer between model code and the mesh.
+
+Model templates and layer code never name mesh axes directly; they name
+*logical* axes and this package resolves them against whatever mesh is in
+play. That indirection is what lets one codebase lower on a single CPU
+device (everything replicated, ``constrain`` a no-op), a 2D ``(data,
+model)`` 256-chip pod, and a 3D ``(pod, data, model)`` multi-pod mesh
+without touching model code — mesh axes a mesh lacks simply drop out of
+the resolved ``PartitionSpec``.
+
+Logical-axis vocabulary (defaults; override via ``Rules.make``):
+
+- ``batch``    -> ``("pod", "data")`` — data parallelism; the pod axis
+  composes into the DP product and vanishes on single-pod meshes.
+- ``seq``      -> replicated — sequence/context parallelism is an override
+  (``Rules.make({"seq": ("model",)})``).
+- ``fsdp``     -> ``("data",)`` — weight ``d_model`` dims, ZeRO-3 style.
+- ``heads`` / ``kv_heads`` / ``mlp`` / ``vocab`` / ``expert``
+  -> ``("model",)`` — tensor/expert parallelism.
+- ``kv_seq``   -> replicated — decode KV-cache sequence dim (hillclimb
+  lever).
+- ``layers``   -> replicated — the scanned-layers stack dim.
+
+Typical flow (see ``launch/dryrun.py``)::
+
+    rules = Rules()                        # or Rules.make({...}) overrides
+    pshard = param_shardings(tmpl, mesh, rules)   # via spec_for
+    with use_mesh_rules(mesh, rules):      # makes constrain() live
+        jax.jit(step, in_shardings=...).lower(...).compile()
+"""
+from repro.dist.sharding import (DEFAULT_RULES, Rules, batch_axes_for,
+                                 constrain, get_active_mesh, spec_for,
+                                 use_mesh_rules)
+
+__all__ = ["Rules", "spec_for", "batch_axes_for", "use_mesh_rules",
+           "get_active_mesh", "constrain", "DEFAULT_RULES"]

@@ -1,0 +1,199 @@
+"""Logical-axis sharding: one rule set drives every mesh shape.
+
+Parameters and activations name their dims with *logical* axes (``fsdp``,
+``heads``, ``batch``, ...); ``Rules`` maps each logical axis to the mesh
+axes it shards over. ``spec_for`` resolves a tuple of logical axes to a
+``PartitionSpec`` against a concrete mesh, silently dropping mesh axes the
+mesh does not have — so the same rules drive a 2D ``(data, model)`` single
+pod and a 3D ``(pod, data, model)`` multi-pod mesh (``pod`` just vanishes
+on the former).
+
+Default vocabulary (see ``repro.dist`` package docstring for the full
+story):
+
+==========  =====================  =========================================
+logical     default mesh axes      sharded dim of
+==========  =====================  =========================================
+batch       ("pod", "data")        activation batch (DP)
+seq         replicated             activation sequence (SP/CP via overrides)
+fsdp        ("data",)              weight d_model dim (ZeRO-3 gather axis)
+heads       ("model",)             q-head dim (TP)
+kv_heads    ("model",)             kv-head dim (TP)
+mlp         ("model",)             FFN hidden dim (TP)
+vocab       ("model",)             embedding / logits vocab dim (TP)
+expert      ("model",)             MoE expert dim (EP)
+kv_seq      replicated             decode KV-cache sequence dim
+layers      replicated             scanned-layers stack dim
+==========  =====================  =========================================
+
+``use_mesh_rules(mesh, rules)`` establishes the ambient (mesh, rules) pair
+that ``constrain(x, *axes)`` reads; outside any such context ``constrain``
+is the identity, so model code is unconditionally instrumented and costs
+nothing single-device.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "spec_for", "batch_axes_for", "use_mesh_rules",
+           "get_active_mesh", "constrain", "DEFAULT_RULES"]
+
+# One logical axis maps to: None (replicate) or a tuple of mesh axis names.
+MeshAxes = Optional[Tuple[str, ...]]
+
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "fsdp": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "kv_seq": None,
+    "layers": None,
+}
+
+
+def _norm(v) -> MeshAxes:
+    if v is None:
+        return None
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+class Rules:
+    """Immutable logical-axis -> mesh-axes table.
+
+    ``Rules()`` is the production default (FSDP x TP with the pod axis
+    folded into DP). ``Rules.make({...})`` overlays overrides — values may
+    be a mesh-axis name, a tuple of names, or ``None`` (replicate); logical
+    axes absent from the table resolve to replicated, so overrides can also
+    introduce new vocabulary (e.g. ``kv_seq`` cache sharding).
+    """
+
+    __slots__ = ("_table",)
+
+    def __init__(self, table: Optional[Mapping[str, MeshAxes]] = None):
+        merged = dict(DEFAULT_RULES)
+        if table:
+            merged.update({k: _norm(v) for k, v in table.items()})
+        object.__setattr__(self, "_table", merged)
+
+    @classmethod
+    def make(cls, overrides: Optional[Mapping] = None) -> "Rules":
+        return cls(overrides)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("Rules is immutable; use Rules.make({...})")
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return _norm(self._table.get(logical))
+
+    @property
+    def table(self) -> Mapping[str, MeshAxes]:
+        return dict(self._table)
+
+    def __repr__(self):
+        return f"Rules({self._table!r})"
+
+    def __eq__(self, other):
+        return isinstance(other, Rules) and self._table == other._table
+
+    def __hash__(self):
+        return hash(tuple(sorted(self._table.items())))
+
+
+def spec_for(axes: Sequence[Optional[str]], mesh, rules: Rules) -> P:
+    """Resolve logical ``axes`` to a ``PartitionSpec`` for ``mesh``.
+
+    Mesh axes the mesh lacks are dropped (``pod`` on a single-pod mesh);
+    a mesh axis already consumed earlier in the same spec is dropped too
+    (first occurrence wins), so override sets like sequence parallelism
+    (``seq -> model``) never produce an invalid double-use spec. An entry
+    whose mesh axes all drop becomes ``None`` (replicated).
+    """
+    present = set(getattr(mesh, "axis_names", ()) or mesh.shape.keys())
+    used: set = set()
+    entries = []
+    for logical in axes:
+        ax = rules.mesh_axes(logical)
+        if ax is None:
+            entries.append(None)
+            continue
+        kept = tuple(a for a in ax if a in present and a not in used)
+        used.update(kept)
+        entries.append(kept if kept else None)
+    return P(*entries)
+
+
+def batch_axes_for(batch: int, mesh, rules: Rules) -> P:
+    """Sharding for a length-``batch`` leading dim: ``P((dp_axes,))`` when
+    ``batch`` divides the DP product, else ``P(None)`` (replicated — never
+    an error, so odd shapes like a batch-1 long-context probe still lower).
+    """
+    spec = spec_for(("batch",), mesh, rules)
+    ax = spec[0]
+    if ax is None:
+        return P(None)
+    dp = math.prod(int(mesh.shape[a]) for a in ax)
+    if dp <= 1 or batch % dp != 0:
+        return P(None)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Ambient (mesh, rules) context backing ``constrain``
+# ---------------------------------------------------------------------------
+
+_ACTIVE = threading.local()
+
+
+def get_active_mesh() -> Optional[Tuple[object, Rules]]:
+    """Innermost ``use_mesh_rules`` (mesh, rules) pair, or ``None``."""
+    stack = getattr(_ACTIVE, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh, rules: Rules):
+    """Make (mesh, rules) ambient for ``constrain``/``get_active_mesh``.
+
+    Nests: the innermost pair wins and the outer one is restored on exit.
+    """
+    stack = getattr(_ACTIVE, "stack", None)
+    if stack is None:
+        stack = _ACTIVE.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Pin ``x`` to the sharding its logical axes resolve to.
+
+    Identity when no mesh is active, so layer code calls this
+    unconditionally. Rank must match: one logical axis (or ``None``) per
+    array dim.
+    """
+    ctx = get_active_mesh()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:     # not assert: must survive python -O
+        raise ValueError(
+            f"constrain: {len(logical_axes)} logical axes {logical_axes} "
+            f"for rank-{x.ndim} array of shape {x.shape}")
+    spec = spec_for(logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

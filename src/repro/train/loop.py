@@ -40,6 +40,7 @@ class TrainLoop:
     keep_n: int = 3
     log_path: Optional[str] = None
     straggler_factor: float = 3.0
+    straggler_floor_s: float = 0.01
     on_straggler: Optional[Callable[[int, float], None]] = None
 
     def run(self, params, opt_state, num_steps: int, *, start_step: int = 0,
@@ -57,8 +58,10 @@ class TrainLoop:
             preempted["flag"] = True
 
         prev_handler = signal.signal(signal.SIGTERM, _sigterm)
-        times: list[float] = []
+        times: list[float] = []       # every step (final p50/p99)
+        window: list[float] = []      # outlier-excluded (straggler median)
         stragglers = 0
+        consec_outliers = 0
         log_f = open(self.log_path, "a") if self.log_path else None
         try:
             while step < num_steps:
@@ -69,12 +72,30 @@ class TrainLoop:
                 jax.block_until_ready(metrics["loss"])
                 dt = time.monotonic() - t0
 
-                if len(times) >= 5:
-                    med = float(np.median(times[-50:]))
+                # A flagged step's duration must NOT enter the median window
+                # (one 3x outlier would otherwise drag the median up and/or
+                # leave sub-ms noise flagging the NEXT step too), and the
+                # median is floored so microsecond-scale steps don't turn
+                # timer jitter into false stragglers. But a RUN of flags is
+                # a regime change (longer seqs, degraded node), not a
+                # straggler — after 3 consecutive flags the durations are
+                # admitted so the baseline re-adapts instead of firing
+                # on_straggler every step forever.
+                is_straggler = False
+                if len(window) >= 5:
+                    med = max(float(np.median(window[-50:])),
+                              self.straggler_floor_s)
                     if dt > self.straggler_factor * med:
+                        is_straggler = True
                         stragglers += 1
                         if self.on_straggler:
                             self.on_straggler(step, dt / med)
+                if is_straggler:
+                    consec_outliers += 1
+                if not is_straggler or consec_outliers > 3:
+                    window.append(dt)
+                if not is_straggler:
+                    consec_outliers = 0
                 times.append(dt)
 
                 rec = {k: float(v) for k, v in metrics.items()}

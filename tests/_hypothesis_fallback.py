@@ -1,0 +1,32 @@
+"""Stand-ins for ``hypothesis`` when it isn't installed.
+
+Property tests decorated with ``@given`` become pytest skips; everything
+else in the importing module (parametrized example tests) keeps running,
+so the suite degrades instead of erroring at collection. Install the
+``dev`` extra (``pip install -e .[dev]``) for the real thing.
+"""
+import pytest
+
+_SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+
+class _AnyStrategy:
+    """Absorbs any ``st.<name>(...)`` use at decoration time, including
+    chained strategies (``.filter``/``.map``/``@st.composite``)."""
+
+    def __getattr__(self, name):
+        return self
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+
+st = _AnyStrategy()
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn
+
+
+def given(*args, **kwargs):
+    return lambda fn: _SKIP(fn)

@@ -1,0 +1,123 @@
+"""Unit tests for repro.dist: context handling, rule overrides, and the
+axis-dropping that lets one rule set drive 1D/2D/3D meshes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import (Rules, batch_axes_for, constrain, get_active_mesh,
+                        spec_for, use_mesh_rules)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _mesh(*axes):
+    return jax.make_mesh((1,) * len(axes), axes)
+
+
+class TestConstrainNoMesh:
+    def test_identity_outside_context(self):
+        x = jnp.arange(6.0).reshape(2, 3)
+        assert get_active_mesh() is None
+        y = constrain(x, "batch", "seq")
+        assert y is x                       # literally a no-op, not a copy
+
+    def test_applies_under_active_mesh(self):
+        x = jnp.arange(6.0).reshape(2, 3)
+        with use_mesh_rules(_mesh("data", "model"), Rules()):
+            y = constrain(x, "batch", None)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_rank_mismatch_raises(self):
+        x = jnp.zeros((2, 3))
+        with use_mesh_rules(_mesh("data", "model"), Rules()):
+            with pytest.raises(ValueError, match="rank-2"):
+                constrain(x, "batch")
+
+
+class TestUseMeshRules:
+    def test_nesting_and_restoration(self):
+        m1, m2 = _mesh("data", "model"), _mesh("pod", "data", "model")
+        r1, r2 = Rules(), Rules.make({"seq": ("model",)})
+        assert get_active_mesh() is None
+        with use_mesh_rules(m1, r1):
+            assert get_active_mesh() == (m1, r1)
+            with use_mesh_rules(m2, r2):
+                assert get_active_mesh() == (m2, r2)
+            assert get_active_mesh() == (m1, r1)   # inner exit restores
+        assert get_active_mesh() is None
+
+    def test_restored_on_exception(self):
+        with pytest.raises(RuntimeError):
+            with use_mesh_rules(_mesh("data"), Rules()):
+                raise RuntimeError("boom")
+        assert get_active_mesh() is None
+
+
+class TestRulesMake:
+    def test_defaults(self):
+        r = Rules()
+        assert r.mesh_axes("fsdp") == ("data",)
+        assert r.mesh_axes("heads") == ("model",)
+        assert r.mesh_axes("batch") == ("pod", "data")
+        assert r.mesh_axes("seq") is None
+
+    def test_make_none_is_default(self):
+        assert Rules.make(None) == Rules()
+
+    def test_override_string_normalizes_to_tuple(self):
+        r = Rules.make({"heads": "model_a"})
+        assert r.mesh_axes("heads") == ("model_a",)
+
+    def test_override_to_replicated(self):
+        r = Rules.make({"heads": None, "mlp": None})
+        assert r.mesh_axes("heads") is None
+        assert r.mesh_axes("mlp") is None
+        assert r.mesh_axes("vocab") == ("model",)   # untouched default
+
+    def test_new_vocabulary_and_unknown_axes(self):
+        r = Rules.make({"kv_seq": ("model",)})
+        assert r.mesh_axes("kv_seq") == ("model",)
+        assert r.mesh_axes("never_heard_of_it") is None
+        assert r.mesh_axes(None) is None
+
+    def test_immutable(self):
+        r = Rules()
+        with pytest.raises(AttributeError):
+            r.table_entry = {}
+
+
+class TestSpecForAxisDropping:
+    def test_1d_mesh_drops_model_and_pod(self):
+        mesh = _mesh("data")
+        r = Rules()
+        # heads -> ("model",): model absent -> replicated
+        assert spec_for(("fsdp", "heads"), mesh, r) == P(("data",), None)
+        # batch -> ("pod", "data"): pod absent -> ("data",)
+        assert spec_for(("batch",), mesh, r) == P(("data",))
+
+    def test_2d_mesh_drops_pod(self):
+        mesh = _mesh("data", "model")
+        assert spec_for(("batch", "seq", "mlp"), mesh, Rules()) == \
+            P(("data",), None, ("model",))
+
+    def test_3d_mesh_keeps_everything(self):
+        mesh = _mesh("pod", "data", "model")
+        assert spec_for(("batch", None, "vocab"), mesh, Rules()) == \
+            P(("pod", "data"), None, ("model",))
+
+    def test_duplicate_mesh_axis_first_wins(self):
+        # sequence parallelism: seq and mlp both want "model"; the second
+        # use must drop or the spec would be invalid (axis used twice)
+        mesh = _mesh("data", "model")
+        r = Rules.make({"seq": ("model",)})
+        assert spec_for(("batch", "seq", "mlp"), mesh, r) == \
+            P(("data",), ("model",), None)
+
+    def test_batch_axes_divisibility(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        r = Rules()
+        # dp product is 1 -> replication regardless of batch
+        assert batch_axes_for(8, mesh, r) == P(None)
+        assert batch_axes_for(1, mesh, r) == P(None)

@@ -175,3 +175,23 @@ class TestTrainLoopFaultTolerance:
                          on_straggler=lambda s, r: flagged.append(s))
         loop.run({"w": jnp.zeros(())}, None, 10)
         assert flagged == [7]
+
+    def test_straggler_watchdog_adapts_to_regime_change(self, tmp_path):
+        """A PERMANENT step-time increase (longer seqs, degraded node) is a
+        new baseline, not an endless straggler: after a few consecutive
+        flags the window re-admits durations and the median catches up."""
+        import time as _t
+        from repro.train import TrainLoop
+        calls = {"n": 0}
+
+        def step_fn(p, o, b):
+            _t.sleep(0.02 if calls["n"] < 5 else 0.1)
+            calls["n"] += 1
+            return p, o, {"loss": jnp.zeros(())}
+
+        flagged = []
+        loop = TrainLoop(step_fn, lambda s: {}, straggler_factor=3.0,
+                         on_straggler=lambda s, r: flagged.append(s))
+        loop.run({"w": jnp.zeros(())}, None, 20)
+        assert 5 in flagged                      # the jump itself is seen
+        assert not any(s >= 15 for s in flagged)  # but the baseline adapts
