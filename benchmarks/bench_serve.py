@@ -1,0 +1,109 @@
+"""Serve-engine benchmark: prefill tokens/s + decode tokens/s vs occupancy.
+
+Measures the continuous-batching engine end to end (admission prefill,
+jitted slot-batch decode, sampling, host loop) at several slot
+occupancies, and writes ``BENCH_serve.json`` — the first entry of the
+serving perf trajectory. One engine serves every occupancy (pinned
+``prefill_len`` + n_slots-padded waves mean one compiled prefill program),
+so timings are warm after the first throwaway wave.
+
+CPU container caveat (benchmarks/common.py): numbers are relative A/B
+trends between occupancies, NOT TPU performance.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+
+DEFAULT_OUT = "BENCH_serve.json"
+
+
+def collect(arch: str = "stablelm_12b", n_slots: int = 8,
+            prompt_len: int = 32, steps: int = 12,
+            occupancies=(1, 4, 8)) -> dict:
+    """Run the engine at each occupancy; returns the BENCH_serve payload."""
+    from repro.configs import smoke_config
+    from repro.models import get_model
+    from repro.models.common import init_params
+    from repro.serve import ServeEngine
+
+    cfg = smoke_config(arch)
+    model = get_model(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(0))
+    budget = steps + 4                       # never finishes mid-measurement
+    engine = ServeEngine(model, params, max_len=prompt_len + budget + 8,
+                         n_slots=n_slots, prefill_len=prompt_len)
+    rng = np.random.default_rng(0)
+
+    def submit(n):
+        return [engine.submit(
+            rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32),
+            budget) for _ in range(n)]
+
+    # throwaway wave: compiles prefill/insert/decode/sample once
+    submit(1)
+    engine.run()
+
+    result = {"arch": cfg.name, "n_slots": n_slots,
+              "prompt_len": prompt_len, "decode_steps": steps, "points": []}
+    for occ in occupancies:
+        assert occ <= n_slots, (occ, n_slots)
+        submit(occ)
+        t0 = time.monotonic()
+        engine.admit()
+        t_admit = time.monotonic() - t0
+        engine.decode(); engine.decode()     # decode warmup (already jitted)
+        t0 = time.monotonic()
+        for _ in range(steps):
+            engine.decode()
+        t_dec = time.monotonic() - t0
+        engine.run()                         # drain before the next point
+        result["points"].append({
+            "occupancy": occ,
+            "prefill_tokens_per_s": occ * prompt_len / t_admit,
+            "decode_tokens_per_s": occ * steps / t_dec,
+        })
+    return result
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
+    """benchmarks/run.py entry: emit BENCH_serve.json + CSV rows."""
+    kw = (dict(n_slots=4, prompt_len=16, steps=8, occupancies=(1, 2, 4))
+          if smoke else {})
+    data = collect(**kw)
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    rows = []
+    for p in data["points"]:
+        occ = p["occupancy"]
+        rows.append(Row(f"serve_prefill_occ{occ}",
+                        1e6 / max(p["prefill_tokens_per_s"], 1e-9),
+                        f"{p['prefill_tokens_per_s']:.1f}tok/s"))
+        rows.append(Row(f"serve_decode_occ{occ}",
+                        1e6 / max(p["decode_tokens_per_s"], 1e-9),
+                        f"{p['decode_tokens_per_s']:.1f}tok/s"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    rows = run(out_path=args.out, smoke=args.smoke)
+    for r in rows:
+        print(r.csv())
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@ bench_pde              Table 5   (PDE solver, learnable bias)
 bench_neural           Table 6 / Fig. 7 + App. G (neural decomp)
 bench_io_model         Thm 3.1/3.2, Cor 3.7, Ex. 3.9 (IO model)
 bench_kernels          Fig. 5    (implementation choices / parity)
+bench_serve            [beyond-paper] continuous-batching engine
+                       throughput; also emits BENCH_serve.json
 =====================  ==========================================
 
 CPU container: wall-clock values are relative A/B only; TPU numbers live in
@@ -27,11 +29,11 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_alibi, bench_io_model, bench_kernels,
                             bench_neural, bench_overall, bench_pde,
-                            bench_svd_swin)
+                            bench_serve, bench_svd_swin)
     from benchmarks.common import print_rows
 
     modules = [bench_io_model, bench_overall, bench_alibi, bench_svd_swin,
-               bench_pde, bench_neural, bench_kernels]
+               bench_pde, bench_neural, bench_kernels, bench_serve]
     rows = []
     failed = []
     for m in modules:

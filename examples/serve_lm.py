@@ -1,8 +1,12 @@
-"""Batched serving across the three cache kinds:
+"""Continuous batching across the three cache kinds:
 
-- stablelm (GQA, full KV cache, flash-decoding path),
+- stablelm (GQA, full KV slot segments, flash-decoding path),
 - hymba    (sliding-window RING cache + constant SSM state),
 - mamba2   (pure constant-size SSM state — no KV growth at all).
+
+Ragged prompts arrive at different times; freed slots are refilled from
+the FIFO queue while the other slots keep decoding — one jitted decode
+program per model serves the whole arrival pattern.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -24,14 +28,25 @@ for arch in ("stablelm_12b", "hymba_15b", "mamba2_130m"):
     cfg = smoke_config(arch)
     model = get_model(cfg)
     params = init_params(model.template(), jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, max_len=96)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab, (4, 16)).astype(np.int32)
+    engine = ServeEngine(model, params, max_len=96, n_slots=2, prefill_len=24)
+    rng = np.random.default_rng(0)
+
+    # 5 ragged requests through 2 slots: the queue drains as slots free up
+    rids = [engine.submit(
+        rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32), 12)
+        for n in rng.integers(4, 25, (3,))]
     t0 = time.monotonic()
-    out = engine.generate(prompts, 24)
+    engine.step()                                  # admits the first wave
+    rids += [engine.submit(
+        rng.integers(0, cfg.vocab, (int(n),)).astype(np.int32), 12)
+        for n in rng.integers(4, 25, (2,))]        # late arrivals
+    engine.run()
     dt = time.monotonic() - t0
-    cache = model.init_cache(4, 96)
+
+    n_tok = sum(engine.result(r).size for r in rids)
+    cache = model.init_cache(2, 96)
     kinds = ", ".join(f"{k}:{tuple(v.shape)}" for k, v in cache.items()
                       if k != "length")
-    print(f"{cfg.name:18s} {4 * 24 / dt:7.1f} tok/s | cache {kinds}")
-    print(f"{'':18s} sample: {out[0][:12]}")
+    print(f"{cfg.name:18s} {n_tok / dt:7.1f} tok/s "
+          f"({len(rids)} reqs / 2 slots) | cache {kinds}")
+    print(f"{'':18s} sample: {engine.result(rids[0])[:12]}")

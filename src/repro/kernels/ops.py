@@ -78,8 +78,12 @@ def _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
         phi_q = jnp.broadcast_to(pq, (q.shape[0], n, h, 2)).astype(jnp.float32)
         phi_k = jnp.broadcast_to(pk, (q.shape[0], m, 1, 2)).astype(jnp.float32)
     if phi_k is not None and phi_k.shape[2] not in (1, q.shape[2]):
-        phi_k = jnp.broadcast_to(
-            phi_k[:, :, :1], (*phi_k.shape[:2], q.shape[2], phi_k.shape[3]))
+        # per-kv-head factors (B, M, KVH, R): expand each kv head's factor
+        # row over its group of query heads. (Collapsing to head 0 here
+        # would silently mis-bias every non-first kv group under GQA.)
+        kvh_pk = phi_k.shape[2]
+        assert q.shape[2] % kvh_pk == 0, (phi_k.shape, q.shape)
+        phi_k = jnp.repeat(phi_k, q.shape[2] // kvh_pk, axis=2)
     if phi_k is not None and phi_k.shape[2] == 1:
         phi_k = jnp.broadcast_to(
             phi_k, (*phi_k.shape[:2], q.shape[2], phi_k.shape[3]))
@@ -104,6 +108,9 @@ def _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
     if phi_q is not None:
         r = phi_q.shape[-1]
         r_p = _ceil_to(r, _LANE)
+        if phi_k.shape[2] not in (1, h):     # per-kv-head: expand per group
+            assert h % phi_k.shape[2] == 0, (phi_k.shape, h)
+            phi_k = jnp.repeat(phi_k, h // phi_k.shape[2], axis=2)
         phi_k_full = jnp.broadcast_to(phi_k, (b, m, h, r))
         pqt = _pad_axis(_pad_axis(phi_q, 1, n_p), 3, r_p).transpose(0, 2, 1, 3)
         pkt = _pad_axis(_pad_axis(phi_k_full, 1, m_p), 3, r_p).transpose(0, 2, 1, 3)
@@ -218,7 +225,7 @@ def flash_decode(
     v_cache: jax.Array,                  # (B, S, KVH, Dv)
     lengths: jax.Array,                  # (B,) int32
     phi_q: Optional[jax.Array] = None,   # (B, 1, H, R)
-    phi_k: Optional[jax.Array] = None,   # (B, S, H|1, R)
+    phi_k: Optional[jax.Array] = None,   # (B, S, KVH|H|1, R)
     slopes: Optional[jax.Array] = None,  # (H,)
     *,
     scale: Optional[float] = None,
@@ -244,6 +251,10 @@ def flash_decode(
 
     if impl == "xla":
         phi_k_x = phi_k
+        if phi_k_x is not None and phi_k_x.shape[2] not in (1, h):
+            # per-kv-head factors: expand over each kv head's query group
+            assert h % phi_k_x.shape[2] == 0, (phi_k_x.shape, h)
+            phi_k_x = jnp.repeat(phi_k_x, h // phi_k_x.shape[2], axis=2)
         if phi_k_x is not None and phi_k_x.shape[2] == 1:
             phi_k_x = jnp.broadcast_to(phi_k_x, (b, s_len, h, phi_k_x.shape[-1]))
         if slopes is not None:
@@ -287,10 +298,18 @@ def flash_decode(
         r = phi_q.shape[-1]
         r_p = _ceil_to(r, _LANE)
         pqt = to_grouped_q(phi_q, r_p)
-        phi_k_full = jnp.broadcast_to(phi_k, (b, s_len, h, r))
-        # key factors per q-head; for grouped layout take the kv-head slice
-        # (valid when the factor is head-shared or per-kv-head).
-        pk_kv = phi_k_full.reshape(b, s_len, kvh, g, r)[:, :, :, 0]
+        # The grouped-key layout carries ONE key factor per kv head:
+        # per-kv-head (B, S, KVH, R) rides as-is, head-shared broadcasts,
+        # and a per-q-head factor is only valid when shared within each
+        # group (take the group's first head).
+        kvh_pk = phi_k.shape[2]
+        if kvh_pk == kvh:
+            pk_kv = phi_k
+        elif kvh_pk == 1:
+            pk_kv = jnp.broadcast_to(phi_k, (b, s_len, kvh, r))
+        else:
+            assert kvh_pk == h, (phi_k.shape, h, kvh)
+            pk_kv = phi_k.reshape(b, s_len, kvh, g, r)[:, :, :, 0]
         pkt = to_cache(pk_kv, r_p)
     slopes_g = None
     if slopes is not None:

@@ -1,7 +1,9 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Prefill a batch of synthetic prompts and decode greedily — the runnable
-wrapper around ``serve_step`` (which the decode-shaped dry-run cells lower).
+Drives the continuous-batching engine against synthetic traffic: ragged
+prompt lengths, staggered arrivals (requests keep joining the queue while
+earlier ones decode), and per-request sampling. The decode step stays one
+jitted program over the full slot batch regardless of the arrival pattern.
 """
 from __future__ import annotations
 
@@ -14,16 +16,20 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
-from repro.serve import ServeEngine
+from repro.serve import SamplingParams, ServeEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length (ragged draws in [4, prompt-len])")
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -31,19 +37,37 @@ def main(argv=None):
     model = get_model(cfg)
     params = init_params(model.template(), jax.random.PRNGKey(args.seed))
     engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.new_tokens + 8)
+                         max_len=args.prompt_len + args.new_tokens + 8,
+                         n_slots=args.slots, prefill_len=args.prompt_len)
 
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab,
-                           (args.batch, args.prompt_len)).astype(np.int32)
+    lens = rng.integers(4, args.prompt_len + 1, (args.requests,))
+    rids = []
     t0 = time.monotonic()
-    out = engine.generate(prompts, args.new_tokens)
+    # staggered arrivals: half the traffic queues up front, the rest joins
+    # one request per engine step while earlier requests are mid-decode
+    for i in range(args.requests // 2):
+        rids.append(engine.submit(
+            rng.integers(0, cfg.vocab, (lens[i],)).astype(np.int32),
+            args.new_tokens,
+            sampling=SamplingParams(args.temperature, args.top_k, seed=i)))
+    i = args.requests // 2
+    while len(engine.scheduler) or engine.occupancy or i < args.requests:
+        if i < args.requests:
+            rids.append(engine.submit(
+                rng.integers(0, cfg.vocab, (lens[i],)).astype(np.int32),
+                args.new_tokens,
+                sampling=SamplingParams(args.temperature, args.top_k, seed=i)))
+            i += 1
+        engine.step()
     dt = time.monotonic() - t0
-    tok_s = args.batch * args.new_tokens / dt
-    print(f"[serve] {cfg.name}: generated {out.shape} in {dt:.2f}s "
-          f"({tok_s:.1f} tok/s)")
-    print("first row:", out[0][:16])
-    return out
+
+    n_tok = sum(engine.result(r).size for r in rids)
+    print(f"[serve] {cfg.name}: {args.requests} ragged requests "
+          f"(prompts {lens.min()}-{lens.max()}) over {args.slots} slots: "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    print("first request:", engine.result(rids[0])[:16])
+    return [engine.result(r) for r in rids]
 
 
 if __name__ == "__main__":

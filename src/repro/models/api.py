@@ -4,9 +4,13 @@
 
 - ``template()``                     — PDef tree (shapes + sharding axes),
 - ``loss(params, batch)``            — training loss,
-- ``prefill(params, batch, max_len)``— prompt -> (logits, cache),
+- ``prefill(params, batch, max_len, lengths)`` — prompt -> (logits, cache);
+  ``lengths`` (B,) enables ragged right-padded prompts (logits gathered at
+  each row's last valid position, state paths freeze there),
 - ``decode(params, cache, tokens)``  — one token -> (logits, cache),
 - ``init_cache(batch, max_len)``     — zeroed cache pytree,
+- ``insert_cache(dst, src, slots)``  — scatter prefilled wave rows into the
+  serve engine's slot cache (out-of-range slot ids are dropped),
 - ``input_specs(shape)``             — ShapeDtypeStruct stand-ins for every
   model input of an assigned (shape) cell: weak-type-correct, shardable,
   never allocated. This is what the multi-pod dry-run lowers against.
@@ -33,6 +37,7 @@ class Model:
     prefill: Optional[Callable] = None
     decode: Optional[Callable] = None
     init_cache: Optional[Callable] = None
+    insert_cache: Optional[Callable] = None
     input_specs: Optional[Callable] = None
 
 
@@ -69,11 +74,12 @@ def _lm_model(cfg: ArchConfig) -> Model:
         cfg=cfg,
         template=lambda: lm.lm_template(cfg),
         loss=lambda p, batch: lm.loss_fn(p, batch, cfg),
-        prefill=lambda p, batch, max_len=None: lm.prefill(
-            p, batch, cfg, max_len=max_len),
+        prefill=lambda p, batch, max_len=None, lengths=None: lm.prefill(
+            p, batch, cfg, max_len=max_len, lengths=lengths),
         decode=lambda p, cache, tokens: lm.decode_step(p, cache, tokens, cfg),
         init_cache=lambda b, max_len, length=0: lm.init_cache(
             cfg, b, max_len, length=length),
+        insert_cache=lm.insert_cache_at_slots,
         input_specs=input_specs,
     )
 

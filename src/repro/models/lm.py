@@ -34,7 +34,7 @@ from repro.models.common import (PDef, cross_entropy_loss, embed_lookup,
                                  unembed_logits)
 
 __all__ = ["lm_template", "loss_fn", "prefill", "decode_step", "init_cache",
-           "forward_hidden"]
+           "insert_cache_at_slots", "forward_hidden"]
 
 
 # ---------------------------------------------------------------------------
@@ -239,8 +239,13 @@ def _moe_capacity(cfg: ArchConfig, s: int) -> int:
     return max(1, c)
 
 
-def _moe_ffn(mp: dict, x: jax.Array, cfg: ArchConfig):
-    """Returns (y, aux_loss). x: (B, S, D)."""
+def _moe_ffn(mp: dict, x: jax.Array, cfg: ArchConfig, valid=None):
+    """Returns (y, aux_loss). x: (B, S, D).
+
+    ``valid`` (B, S) bool marks real positions of a right-padded batch:
+    invalid positions are dropped from dispatch entirely, so they consume
+    no expert capacity and receive a zero update.
+    """
     b, s, d = x.shape
     ep, k = cfg.experts_padded, cfg.top_k
     cap = _moe_capacity(cfg, s)
@@ -258,6 +263,8 @@ def _moe_ffn(mp: dict, x: jax.Array, cfg: ArchConfig):
 
     # slot-major one-hot: (B, K, S, E); positions assigned slot-0 first
     onehot = jax.nn.one_hot(gate_idx, ep, dtype=jnp.float32)    # (B,S,K,E)
+    if valid is not None:
+        onehot = onehot * valid[:, :, None, None].astype(jnp.float32)
     sel = onehot.transpose(0, 2, 1, 3)                          # (B,K,S,E)
     flat = sel.reshape(b, k * s, ep)
     pos = jnp.cumsum(flat, axis=1) - flat                       # pos within expert
@@ -297,31 +304,55 @@ def _ssm_proj(sp: dict, x: jax.Array):
     return xs, z, bmat, cmat, dt
 
 
-def _causal_conv(seq, w, tail=None):
-    """Depthwise causal conv. seq: (B,S,...) w: (W, ...); tail: (B,W-1,...)."""
+def _causal_conv(seq, w, tail=None, lengths=None):
+    """Depthwise causal conv. seq: (B,S,...) w: (W, ...); tail: (B,W-1,...).
+
+    With ``lengths`` (B,) the returned tail holds the last W-1 inputs at or
+    before position ``lengths[b]-1`` (ragged right-padded prefill); position
+    ``p`` lives at index ``p + W-1`` of the padded buffer, so the tail spans
+    indices ``lengths[b] .. lengths[b]+W-2``.
+    """
     width = w.shape[0]
     if tail is None:
         tail = jnp.zeros((seq.shape[0], width - 1) + seq.shape[2:], seq.dtype)
     full = jnp.concatenate([tail, seq], axis=1)
     out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(width))
-    new_tail = full[:, -(width - 1):] if width > 1 else tail
+    if width == 1:
+        new_tail = tail
+    elif lengths is None:
+        new_tail = full[:, -(width - 1):]
+    else:
+        idx = lengths[:, None].astype(jnp.int32) + jnp.arange(width - 1)
+        idx = idx.reshape(idx.shape + (1,) * (full.ndim - 2))
+        new_tail = jnp.take_along_axis(full, idx, axis=1)
     return out, new_tail
 
 
 def _ssm_forward(sp: dict, x: jax.Array, cfg: ArchConfig, *, h0=None,
-                 conv_tail_x=None, conv_tail_bc=None):
-    """Full-sequence SSD. Returns (y (B,S,D), h_fin, tail_x, tail_bc)."""
+                 conv_tail_x=None, conv_tail_bc=None, lengths=None):
+    """Full-sequence SSD. Returns (y (B,S,D), h_fin, tail_x, tail_bc).
+
+    ``lengths`` (B,) marks the valid prefix of a right-padded batch: padded
+    positions get dt = 0, which makes their state update the identity
+    (decay exp(a*0) = 1, input term dt*x = 0), so ``h_fin`` and the conv
+    tails are exactly the state after position ``lengths[b]-1``.
+    """
     xs, z, bmat, cmat, dt = _ssm_proj(sp, x)
     dt_ = x.dtype
-    xs, tail_x = _causal_conv(xs, sp["conv_w"].astype(dt_), conv_tail_x)
+    xs, tail_x = _causal_conv(xs, sp["conv_w"].astype(dt_), conv_tail_x,
+                              lengths=lengths)
     xs = jax.nn.silu(xs)
     bc = jnp.concatenate([bmat, cmat], axis=-1)
-    bc, tail_bc = _causal_conv(bc, sp["conv_bc_w"].astype(dt_), conv_tail_bc)
+    bc, tail_bc = _causal_conv(bc, sp["conv_bc_w"].astype(dt_), conv_tail_bc,
+                               lengths=lengths)
     bc = jax.nn.silu(bc)
     n = cfg.ssm_state
     bmat, cmat = bc[..., :n], bc[..., n:]
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + sp["dt_bias"].astype(jnp.float32))
+    if lengths is not None:
+        keep = jnp.arange(x.shape[1])[None, :] < lengths[:, None]
+        dt = jnp.where(keep[:, :, None], dt, 0.0)
     a = -jnp.exp(sp["a_log"].astype(jnp.float32))
     y, h_fin = ssd.ssd_scan(xs.astype(jnp.float32), dt, a,
                             bmat.astype(jnp.float32),
@@ -393,8 +424,13 @@ def _layer_train(lp: dict, x: jax.Array, cfg: ArchConfig):
     return x, aux
 
 
-def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig):
-    """Like _layer_train but emits this layer's cache entries."""
+def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig, lengths=None):
+    """Like _layer_train but emits this layer's cache entries.
+
+    ``lengths`` (B,) enables ragged right-padded prefill: the causal mask
+    already keeps padded keys out of real queries' attention, so only the
+    state-carrying paths (SSM scan, conv tails, MoE capacity) need it.
+    """
     cache = {}
     h = rmsnorm(x, lp["ln1"])
     mask_kind = "local" if cfg.window else "causal"
@@ -402,7 +438,7 @@ def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig):
         y, k, v = _attention(lp["attn"], h, cfg, mask_kind=mask_kind)
         cache["k"], cache["v"] = k, v
     if cfg.family in ("ssm", "hybrid"):
-        ys, hf, tx, tbc = _ssm_forward(lp["ssm"], h, cfg)
+        ys, hf, tx, tbc = _ssm_forward(lp["ssm"], h, cfg, lengths=lengths)
         cache["ssm_h"], cache["conv_x"], cache["conv_bc"] = hf, tx, tbc
     if cfg.family in ("dense", "moe"):
         x = x + y
@@ -412,7 +448,10 @@ def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig):
         x = x + 0.5 * (rmsnorm(y, lp["branch_norm_attn"])
                        + rmsnorm(ys, lp["branch_norm_ssm"]))
     if cfg.family == "moe":
-        y2, _ = _moe_ffn(lp["moe"], rmsnorm(x, lp["ln2"]), cfg)
+        valid = None
+        if lengths is not None:
+            valid = jnp.arange(x.shape[1])[None, :] < lengths[:, None]
+        y2, _ = _moe_ffn(lp["moe"], rmsnorm(x, lp["ln2"]), cfg, valid=valid)
         x = x + y2
     elif cfg.family in ("dense", "hybrid"):
         m = lp["mlp"]
@@ -537,29 +576,43 @@ def loss_fn(params, batch, cfg: ArchConfig):
     return ce + 0.01 * aux
 
 
-def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None):
+def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None,
+            lengths=None):
     """Run the prompt; return (last-position logits, cache).
 
     The cache is allocated at ``max_len`` (>= prompt length + decode budget)
     or at ``window`` for sliding-window attention (ring buffer).
+
+    ``lengths`` (B,) int32 enables RAGGED right-padded prefill: row ``b``'s
+    valid prompt (frontend included) is positions ``0 .. lengths[b]-1``.
+    Logits are gathered at each row's last valid position, the SSM state /
+    conv tails freeze there, MoE capacity ignores padding, and the ring
+    cache is filled per-request. Positions past ``lengths[b]`` hold junk
+    that decode-time length masking never reads and decode writes overwrite.
     """
     tokens = batch["tokens"]
     frontend = batch.get("frontend")
     b, s = tokens.shape
     total = s + (frontend.shape[1] if frontend is not None else 0)
     max_len = max_len or total
+    lengths = None if lengths is None else jnp.asarray(lengths, jnp.int32)
     x = _embed_in(params, tokens, frontend, cfg)
 
     def body(x, lp):
-        x, cache_l = _layer_prefill(lp, x, cfg)
+        x, cache_l = _layer_prefill(lp, x, cfg, lengths=lengths)
         return x, cache_l
 
     x, caches = jax.lax.scan(body, x, _compute_layers(params, cfg),
                              unroll=flags.scan_unroll(cfg.n_layers))
     hid = rmsnorm(x, params["final_norm"])
-    logits = unembed_logits(hid[:, -1:], params["embed"].astype(hid.dtype))
+    if lengths is None:
+        last = hid[:, -1:]
+    else:
+        last = jnp.take_along_axis(hid, (lengths - 1)[:, None, None], axis=1)
+    logits = unembed_logits(last, params["embed"].astype(hid.dtype))
 
-    cache = {"length": jnp.full((b,), total, jnp.int32)}
+    lens = (jnp.full((b,), total, jnp.int32) if lengths is None else lengths)
+    cache = {"length": lens}
     if "k" in caches:
         sc = cfg.window if (cfg.window and cfg.window < max_len) else max_len
         k, v = caches["k"], caches["v"]          # (L,B,S,KV,hd)
@@ -567,11 +620,16 @@ def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None):
             pad = sc - total
             cache["k"] = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
             cache["v"] = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        else:                                    # ring: keep last window, rolled
-            tail_k, tail_v = k[:, :, -sc:], v[:, :, -sc:]
-            shift = total % sc                   # slot of position `total-sc`
-            cache["k"] = jnp.roll(tail_k, shift, axis=2)
-            cache["v"] = jnp.roll(tail_v, shift, axis=2)
+        else:
+            # ring invariant: slot s holds the last position p < len with
+            # p ≡ s (mod window); slots with no such p >= 0 are junk the
+            # decode-side validity test (pos >= 0) never reads.
+            slot = jnp.arange(sc)
+            last_pos = (lens - 1)[:, None]                     # (B, 1)
+            pos = last_pos - ((last_pos - slot[None, :]) % sc)  # (B, sc)
+            idx = jnp.clip(pos, 0, total - 1)[None, :, :, None, None]
+            cache["k"] = jnp.take_along_axis(k, idx, axis=2)
+            cache["v"] = jnp.take_along_axis(v, idx, axis=2)
     for key in ("ssm_h", "conv_x", "conv_bc"):
         if key in caches:
             cache[key] = caches[key]
@@ -621,3 +679,23 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
         cache["conv_x"] = jnp.zeros((l, batch, w - 1, hs, p), dt)
         cache["conv_bc"] = jnp.zeros((l, batch, w - 1, 2 * n), dt)
     return cache
+
+
+def insert_cache_at_slots(dst: dict, src: dict, slots) -> dict:
+    """Scatter wave-cache rows of ``src`` into batch slots of ``dst``.
+
+    ``slots`` (W,) int32 gives the destination slot of each wave row; rows
+    whose entry is out of range (>= n_slots) are DROPPED, so a fixed-size
+    prefill wave can carry padding rows without a second compile. Works for
+    every cache kind: ``length`` is per-slot, everything else is layer-major
+    ``(L, B, ...)`` — including per-slot ``phi_k`` factor rows if a model
+    caches them.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for key, v in dst.items():
+        if key == "length":
+            out[key] = v.at[slots].set(src[key], mode="drop")
+        else:
+            out[key] = v.at[:, slots].set(src[key], mode="drop")
+    return out

@@ -1,4 +1,11 @@
-"""Serving substrate: batched prefill + decode engine over cache pytrees."""
-from repro.serve.engine import ServeEngine
+"""Serving substrate: continuous-batching engine over slot cache pytrees.
 
-__all__ = ["ServeEngine"]
+See README.md in this directory for the slot/cache/scheduler contract and
+the request lifecycle.
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import FIFOScheduler, Request
+
+__all__ = ["ServeEngine", "SamplingParams", "sample_tokens",
+           "FIFOScheduler", "Request"]

@@ -1,58 +1,278 @@
-"""Batched serving engine: prefill once, decode greedily against the cache.
+"""Continuous-batching serve engine over the ragged flash-decode path.
+
+The engine owns ``n_slots`` decode lanes. Each slot is one batch row of
+every cache leaf — a ``max_len`` KV segment (ring window / SSM state for
+those families), its own ``length`` entry, sampling state (temperature,
+top-k, PRNG key chain) and an output buffer. A FIFO scheduler admits
+queued requests into freed slots; each admission wave is prefilled
+right-padded (batch padded to ``n_slots`` and prompt padded to the wave
+maximum or a pinned ``prefill_len``, so at most a handful of prefill
+programs ever compile) and scattered into the slot cache with
+``Model.insert_cache``. Decode is ONE jitted step over the full slot batch
+every iteration — per-request raggedness rides in the ``lengths`` vector
+the flash-decode kernel block-skips on — so arbitrary arrival/finish
+patterns never recompile and never stall on the slowest request.
+
+Determinism contract (tested in tests/test_serve_engine.py): every
+per-slot computation is batch-row independent and the sampler key chain is
+per-request, so a request's output is identical whether it runs alone or
+packed with strangers — provided ``prefill_len`` is pinned (the padded
+prompt length is the one shape that changes with wave composition).
 
 Cache kinds (all pytrees, all jit-traceable):
 
 - full KV            (dense/moe archs)        — (L, B, S_max, KV, hd),
 - ring KV            (sliding-window archs)   — (L, B, window, KV, hd),
 - SSM state + conv   (ssm/hybrid archs)       — constant size.
-
-``serve_step`` (= one decode step) is what the decode-shaped dry-run cells
-lower; the engine is the runnable wrapper around it (examples/serve_lm.py).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Callable, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import FIFOScheduler, Request
 
 __all__ = ["ServeEngine"]
 
 
 @dataclasses.dataclass
+class _Slot:
+    """Host-side state of one occupied decode lane."""
+    req: Request
+    generated: int = 0
+
+
 class ServeEngine:
-    model: Model
-    params: dict
-    max_len: int = 1024
-    eos_id: int = -1          # -1: never stop early
+    """Slot-based continuous-batching engine (prefill/decode/sample).
 
-    def __post_init__(self):
-        self._decode = jax.jit(self.model.decode)
+    Args:
+        model: a decode-capable ``Model`` (prefill/decode/init_cache/
+            insert_cache).
+        params: parameter pytree.
+        max_len: per-slot cache segment length (prompt + decode budget must
+            fit for full-KV families).
+        eos_id: generation stops when this id is sampled (it is kept in the
+            output; remaining columns of ``generate`` pad with it). -1
+            never matches, i.e. requests always run out their budget.
+        n_slots: fixed decode batch — the number of concurrent requests.
+        prefill_len: pinned padded prompt length. None pads each admission
+            wave to its own maximum (fewest wasted FLOPs); pinning it makes
+            request outputs independent of wave composition and bounds
+            prefill compiles to one.
+    """
 
-    def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 frontend: Optional[np.ndarray] = None) -> np.ndarray:
-        """prompts: (B, T) int32 (same-length; pad upstream). Greedy decode.
+    def __init__(self, model: Model, params: dict, max_len: int = 1024,
+                 eos_id: int = -1, n_slots: int = 4,
+                 prefill_len: Optional[int] = None):
+        assert model.prefill is not None and model.decode is not None, \
+            "model is not decode-capable"
+        self.model, self.params = model, params
+        self.max_len, self.eos_id = max_len, eos_id
+        self.n_slots, self.prefill_len = n_slots, prefill_len
+        cfg = model.cfg
+        self._vocab = cfg.vocab
+        self._front_dim = (cfg.frontend_len, cfg.d_model)
+        # full-KV families must fit prompt + budget inside the slot segment
+        self._bounded_cache = (cfg.family in ("dense", "moe", "hybrid")
+                               and not (cfg.window and cfg.window < max_len))
+        self.scheduler = FIFOScheduler()
+        self._next_rid = 0
+        self._results: Dict[int, List[int]] = {}
+        self._done: Dict[int, bool] = {}
+        self._live: Dict[int, _Slot] = {}         # slot -> _Slot
+        self._free: List[int] = list(range(n_slots))
+        self._cache = None                        # allocated on first step
 
-        Returns (B, max_new_tokens) generated ids.
+        def _pf(p, toks, front, lengths):
+            batch = {"tokens": toks}
+            if front is not None:
+                batch["frontend"] = front
+            return model.prefill(p, batch, max_len=max_len, lengths=lengths)
+
+        self._prefill = jax.jit(_pf)
+        self._decode = jax.jit(model.decode)
+        self._insert = jax.jit(model.insert_cache)
+
+    # ------------------------------------------------------------------
+    # Request lifecycle
+    # ------------------------------------------------------------------
+
+    def submit(self, tokens, max_new_tokens: int,
+               sampling: Optional[SamplingParams] = None,
+               frontend: Optional[np.ndarray] = None) -> int:
+        """Queue one request; returns its request id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, np.asarray(tokens), max_new_tokens,
+                      sampling or SamplingParams(), frontend)
+        if self.prefill_len is not None:
+            assert req.tokens.size <= self.prefill_len, \
+                (req.tokens.size, self.prefill_len)
+        if self._bounded_cache:
+            assert req.prompt_len + max_new_tokens <= self.max_len, \
+                f"prompt {req.prompt_len} + budget {max_new_tokens} " \
+                f"exceeds slot segment {self.max_len}"
+        # ring-KV keeps only the last `window` keys and SSM state is
+        # constant-size, so those families accept prompts of any length
+        self._results[rid] = []
+        self._done[rid] = False
+        self.scheduler.add(req)
+        return rid
+
+    def result(self, rid: int) -> np.ndarray:
+        """Generated ids so far for ``rid`` (complete iff ``is_done``)."""
+        return np.asarray(self._results[rid], np.int32)
+
+    def is_done(self, rid: int) -> bool:
+        return self._done[rid]
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._live)
+
+    # ------------------------------------------------------------------
+    # Engine steps
+    # ------------------------------------------------------------------
+
+    def step(self) -> List[int]:
+        """Admit queued requests into free slots, then advance every live
+        slot one token. Returns rids that finished during this step."""
+        self._ensure_state()
+        finished = []
+        if self._free and len(self.scheduler):
+            finished += self.admit()
+        if self._live:
+            finished += self.decode()
+        return finished
+
+    def run(self) -> None:
+        """Step until the queue and all slots drain."""
+        self._ensure_state()
+        while self._live or len(self.scheduler):
+            self.step()
+
+    def admit(self) -> List[int]:
+        """Prefill the next admission wave into freed slots and emit each
+        admitted request's first token (from its prefill logits)."""
+        self._ensure_state()
+        wave = self.scheduler.take(len(self._free))
+        if not wave:
+            return []
+        slots = [self._free.pop(0) for _ in wave]
+        ns, w = self.n_slots, len(wave)
+
+        # right-pad prompts; pad the wave batch to n_slots so exactly one
+        # prefill program serves every wave size (padding rows are dropped
+        # at insert via an out-of-range slot id)
+        pl = self.prefill_len or max(r.tokens.size for r in wave)
+        toks = np.zeros((ns, pl), np.int32)
+        lengths = np.ones((ns,), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, :r.tokens.size] = r.tokens
+            lengths[i] = r.prompt_len
+        front = None
+        has_front = [r.frontend is not None for r in wave]
+        if any(has_front):
+            assert all(has_front), "wave mixes frontend/frontend-less requests"
+            front = np.zeros((ns,) + self._front_dim, np.float32)
+            for i, r in enumerate(wave):
+                front[i] = r.frontend
+            front = jnp.asarray(front)
+
+        logits, wave_cache = self._prefill(
+            self.params, jnp.asarray(toks), front, jnp.asarray(lengths))
+        slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
+        slot_ids[:w] = slots
+        self._cache = self._insert(self._cache, wave_cache, slot_ids)
+
+        # per-slot sampling state + per-request PRNG chains
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        self._temps = self._temps.at[sl].set(jnp.asarray(
+            [r.sampling.temperature for r in wave], jnp.float32))
+        self._topks = self._topks.at[sl].set(jnp.asarray(
+            [r.sampling.top_k for r in wave], jnp.int32))
+        self._keys = self._keys.at[sl].set(jnp.stack(
+            [jax.random.PRNGKey(r.sampling.seed) for r in wave]))
+
+        # first token: scatter wave-row logits into slot rows, sample
+        lg = jnp.zeros((ns, logits.shape[-1]), logits.dtype)
+        lg = lg.at[jnp.asarray(slot_ids)].set(logits[:, 0], mode="drop")
+        mask = np.zeros((ns,), bool)
+        mask[slots] = True
+        for slot, r in zip(slots, wave):
+            self._live[slot] = _Slot(r)
+        return self._sample_and_commit(lg, mask)
+
+    def decode(self) -> List[int]:
+        """One jitted decode step over the full slot batch."""
+        self._ensure_state()
+        logits, self._cache = self._decode(self.params, self._cache,
+                                           self._last_tok)
+        mask = np.zeros((self.n_slots,), bool)
+        mask[list(self._live)] = True
+        return self._sample_and_commit(logits[:, 0], mask)
+
+    def generate(self, prompts, max_new_tokens: int, frontend=None,
+                 sampling: Optional[SamplingParams] = None) -> np.ndarray:
+        """Batch convenience wrapper (the PR-1 era API, now ragged-capable).
+
+        prompts: (B, T) int32 array OR a list of 1-D ragged prompts.
+        Returns (B, max_new_tokens) generated ids; rows that stop early at
+        ``eos_id`` pad the remaining columns with ``eos_id``.
         """
-        batch = {"tokens": jnp.asarray(prompts)}
-        if frontend is not None:
-            batch["frontend"] = jnp.asarray(frontend)
-        logits, cache = self.model.prefill(self.params, batch,
-                                           max_len=self.max_len)
-        b = prompts.shape[0]
-        out = np.zeros((b, max_new_tokens), np.int32)
-        done = np.zeros((b,), bool)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        for i in range(max_new_tokens):
-            out[:, i] = np.where(done, self.eos_id, np.asarray(tok[:, 0]))
-            done |= np.asarray(tok[:, 0]) == self.eos_id
-            if done.all():
-                break
-            logits, cache = self._decode(self.params, cache, tok)
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        rows = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        rids = [self.submit(row, max_new_tokens, sampling=sampling,
+                            frontend=None if frontend is None
+                            else np.asarray(frontend[i]))
+                for i, row in enumerate(rows)]
+        self.run()
+        out = np.full((len(rows), max_new_tokens), self.eos_id, np.int32)
+        for i, rid in enumerate(rids):
+            got = self.result(rid)
+            out[i, :got.size] = got
         return out
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+
+    def _ensure_state(self) -> None:
+        if self._cache is not None:
+            return
+        ns = self.n_slots
+        self._cache = self.model.init_cache(ns, self.max_len)
+        self._temps = jnp.zeros((ns,), jnp.float32)
+        self._topks = jnp.zeros((ns,), jnp.int32)
+        self._keys = jnp.zeros((ns, 2), jnp.uint32)
+        self._last_tok = jnp.zeros((ns, 1), jnp.int32)
+
+    def _sample_and_commit(self, logits2d, mask: np.ndarray) -> List[int]:
+        """Sample all slots, commit key/token state for ``mask`` slots only
+        (keeping every request's key chain aligned with its token count),
+        record tokens and retire finished requests."""
+        toks, new_keys = sample_tokens(logits2d, self._temps, self._topks,
+                                       self._keys, self._vocab)
+        m = jnp.asarray(mask)
+        self._keys = jnp.where(m[:, None], new_keys, self._keys)
+        self._last_tok = jnp.where(m[:, None], toks[:, None], self._last_tok)
+        toks_np = np.asarray(toks)
+
+        finished = []
+        for slot in [s for s in self._live if mask[s]]:
+            st = self._live[slot]
+            t = int(toks_np[slot])
+            self._results[st.req.rid].append(t)
+            st.generated += 1
+            if t == self.eos_id or st.generated >= st.req.max_new_tokens:
+                self._done[st.req.rid] = True
+                finished.append(st.req.rid)
+                del self._live[slot]
+                bisect.insort(self._free, slot)
+        return finished

@@ -1,0 +1,65 @@
+"""Per-slot token sampling: greedy / temperature / top-k.
+
+All slots are sampled in ONE fused call over the (B_slots, V) logits; each
+slot carries its own (temperature, top_k, PRNG key), so a request's sample
+stream is a pure function of its own seed — bit-identical whether the
+request runs alone or packed into a busy batch. The engine's parity test
+relies on this: the sampler consumes one key split per slot per call, and
+the engine commits the new key only for slots that actually emitted a
+token, keeping every request's key chain aligned with its token count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "sample_tokens"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature == 0 selects greedy; top_k == 0 keeps the full vocab."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.temperature >= 0.0, self.temperature
+        assert self.top_k >= 0, self.top_k
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def sample_tokens(logits, temps, top_ks, keys, vocab: int):
+    """Sample one token per slot.
+
+    logits (B, V); temps (B,) f32; top_ks (B,) int32; keys (B, 2) uint32;
+    ``vocab`` masks TP-padded vocab rows so padding ids can never be
+    emitted. Returns (tokens (B,) int32, new_keys (B, 2)).
+    """
+    b, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    if vocab < v:
+        logits = jnp.where(jnp.arange(v) >= vocab, -jnp.inf, logits)
+    greedy = jnp.argmax(logits, axis=-1)
+
+    # per-slot top-k truncation via the k-th largest logit as threshold;
+    # the O(V log V) sort only runs when some slot actually asked for it
+    def _truncate(lg):
+        sorted_desc = jnp.sort(lg, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(
+            sorted_desc, jnp.clip(top_ks - 1, 0, v - 1)[:, None], axis=-1)
+        trunc = jnp.where(lg < kth, -jnp.inf, lg)
+        return jnp.where((top_ks > 0)[:, None], trunc, lg)
+
+    logits = jax.lax.cond(jnp.any(top_ks > 0), _truncate, lambda lg: lg,
+                          logits)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+
+    split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)    # (B, 2, 2)
+    use, carry = split[:, 0], split[:, 1]
+    sampled = jax.vmap(jax.random.categorical)(use, scaled)
+    tok = jnp.where(temps > 0.0, sampled, greedy)
+    return tok.astype(jnp.int32), carry

@@ -1,0 +1,62 @@
+"""FIFO request scheduler for the continuous-batching engine.
+
+Host-side and deliberately dumb: requests join a FIFO queue; whenever the
+engine has freed slots it asks for the next admission wave. Admission never
+reorders (no head-of-line bypass, no length bucketing), so a request's
+admission step is a pure function of the arrival order — which keeps the
+engine's per-request reproducibility contract easy to reason about.
+Smarter policies (shortest-prompt-first, prefill/decode interleaving
+budgets) can swap in behind the same two-method surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+__all__ = ["Request", "FIFOScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side descriptor)."""
+    rid: int
+    tokens: np.ndarray                        # (T,) int32 prompt
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    frontend: Optional[np.ndarray] = None     # (F, D) precomputed embeddings
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        assert self.tokens.size >= 1, "empty prompt"
+        assert self.max_new_tokens >= 1, self.max_new_tokens
+
+    @property
+    def prompt_len(self) -> int:
+        """Valid prefix length (frontend embeddings included)."""
+        front = 0 if self.frontend is None else self.frontend.shape[0]
+        return front + int(self.tokens.size)
+
+
+class FIFOScheduler:
+    """Arrival-order admission into freed slots."""
+
+    def __init__(self):
+        self._queue: Deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def add(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def take(self, n: int) -> List[Request]:
+        """Pop up to ``n`` requests in arrival order."""
+        wave = []
+        while self._queue and len(wave) < n:
+            wave.append(self._queue.popleft())
+        return wave

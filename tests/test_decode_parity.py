@@ -1,0 +1,128 @@
+"""Decode-vs-prefill parity + GQA factored-bias regressions (ISSUE 2).
+
+For GQA (KVH < H), ragged per-request lengths and all three bias modes
+(none / phi / alibi), ``flash_decode`` — on both the XLA and the
+interpreted Pallas path — must match the LAST ROW of full causal
+``flash_attention`` over each request's valid prefix, to fp32 tolerance.
+
+Plus regression tests for two GQA phi_k bugs: the full-attention XLA path
+used to collapse per-kv-head factors to kv head 0, and the Pallas decode
+path used to raise on them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+B, S, H, KVH, D, R = 3, 48, 8, 2, 16, 4
+G = H // KVH
+LENGTHS = np.array([17, 48, 33], np.int32)     # ragged, incl. non-block-multiple
+
+
+def _setup(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KVH, D))
+    v = jax.random.normal(ks[2], (B, S, KVH, D))
+    # PER-KV-HEAD factors: kv heads must get distinct rows for the
+    # regression to bite (the old code used head 0's factors everywhere)
+    pq = jax.random.normal(ks[3], (B, S, H, R))
+    pk = jax.random.normal(ks[4], (B, S, KVH, R))
+    slopes = jnp.asarray(0.5 ** np.arange(1, H + 1), jnp.float32)
+    return q, k, v, pq, pk, slopes
+
+
+def _bias_kwargs(mode, pq, pk, slopes):
+    if mode == "phi":
+        return {"phi_q": pq, "phi_k": pk}
+    if mode == "alibi":
+        return {"slopes": slopes}
+    return {}
+
+
+class TestDecodePrefillParity:
+    @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+    @pytest.mark.parametrize("mode", ["none", "phi", "alibi"])
+    def test_decode_matches_last_prefill_row(self, impl, mode):
+        q, k, v, pq, pk, slopes = _setup()
+        lengths = jnp.asarray(LENGTHS)
+        bidx = jnp.arange(B)
+        q_dec = q[bidx, LENGTHS - 1][:, None]               # (B,1,H,D)
+        kw = _bias_kwargs(mode, pq, pk, slopes)
+        if mode == "phi":
+            kw["phi_q"] = pq[bidx, LENGTHS - 1][:, None]    # (B,1,H,R)
+        out = ops.flash_decode(q_dec, k, v, lengths, impl=impl, block_k=16,
+                               **kw)
+        for b in range(B):
+            n = int(LENGTHS[b])
+            kw_b = _bias_kwargs(mode, pq[b:b + 1, :n], pk[b:b + 1, :n],
+                                slopes)
+            full = ops.flash_attention(q[b:b + 1, :n], k[b:b + 1, :n],
+                                       v[b:b + 1, :n], mask_kind="causal",
+                                       impl="xla", **kw_b)
+            np.testing.assert_allclose(np.asarray(out[b, 0], np.float32),
+                                       np.asarray(full[0, n - 1], np.float32),
+                                       atol=3e-5,
+                                       err_msg=f"{impl}/{mode}/req{b}")
+
+    @pytest.mark.parametrize("mode", ["none", "phi", "alibi"])
+    def test_xla_and_pallas_decode_agree(self, mode):
+        q, k, v, pq, pk, slopes = _setup(key=1)
+        lengths = jnp.asarray(LENGTHS)
+        bidx = jnp.arange(B)
+        q_dec = q[bidx, LENGTHS - 1][:, None]
+        kw = _bias_kwargs(mode, pq, pk, slopes)
+        if mode == "phi":
+            kw["phi_q"] = pq[bidx, LENGTHS - 1][:, None]
+        a = ops.flash_decode(q_dec, k, v, lengths, impl="xla", block_k=16,
+                             **kw)
+        b_ = ops.flash_decode(q_dec, k, v, lengths, impl="pallas_interpret",
+                              block_k=16, **kw)
+        np.testing.assert_allclose(a, b_, atol=3e-5)
+
+
+class TestGQAPhiKRegressions:
+    """The old code silently used kv head 0's key factors for every query
+    head (_xla_path) and raised on (B, S, KVH, R) (decode Pallas path)."""
+
+    def test_full_attention_per_kv_head_phi_k(self):
+        q, k, v, pq, pk, _ = _setup(key=2)
+        out = ops.flash_attention(q, k, v, pq, pk, mask_kind="causal",
+                                  impl="xla")
+        pk_full = jnp.repeat(pk, G, axis=2)                 # (B,S,H,R)
+        want = ref.mha_reference(q, k, v, phi_q=pq, phi_k=pk_full,
+                                 mask_kind="causal")
+        np.testing.assert_allclose(out, want, atol=3e-5)
+        # the head-0 collapse must actually produce DIFFERENT values here,
+        # otherwise this regression test would pass vacuously
+        pk_head0 = jnp.broadcast_to(pk[:, :, :1], pk_full.shape)
+        wrong = ref.mha_reference(q, k, v, phi_q=pq, phi_k=pk_head0,
+                                  mask_kind="causal")
+        assert float(jnp.abs(want - wrong).max()) > 1e-2
+
+    def test_full_attention_per_kv_head_phi_k_pallas(self):
+        q, k, v, pq, pk, _ = _setup(key=3)
+        out = ops.flash_attention(q, k, v, pq, pk, mask_kind="causal",
+                                  impl="pallas_interpret",
+                                  block_q=16, block_k=16)
+        pk_full = jnp.repeat(pk, G, axis=2)
+        want = ref.mha_reference(q, k, v, phi_q=pq, phi_k=pk_full,
+                                 mask_kind="causal")
+        np.testing.assert_allclose(out, want, atol=3e-5)
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+    def test_decode_per_kv_head_phi_k(self, impl):
+        """Old Pallas path: jnp.broadcast_to((B,S,KVH,R) -> (B,S,H,R))
+        raises; old XLA path hit the same broadcast in core attention."""
+        q, k, v, pq, pk, _ = _setup(key=4)
+        lengths = jnp.asarray(LENGTHS)
+        bidx = jnp.arange(B)
+        q_dec = q[bidx, LENGTHS - 1][:, None]
+        pq_dec = pq[bidx, LENGTHS - 1][:, None]
+        out = ops.flash_decode(q_dec, k, v, lengths, phi_q=pq_dec, phi_k=pk,
+                               impl=impl, block_k=16)
+        want = ref.decode_reference(q_dec, k, v, lengths, phi_q=pq_dec,
+                                    phi_k=jnp.repeat(pk, G, axis=2))
+        np.testing.assert_allclose(out, want, atol=3e-5)

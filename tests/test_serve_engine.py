@@ -1,0 +1,219 @@
+"""Continuous-batching engine: staggered arrivals/finishes must reproduce
+each request's single-request output exactly (per-slot computation is
+batch-row independent and the sampler key chain is per-request); plus the
+eos-fill regression, the sampling layer, and the FIFO scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model
+from repro.models.common import init_params
+from repro.serve import (FIFOScheduler, Request, SamplingParams, ServeEngine,
+                         sample_tokens)
+
+PF = 12           # pinned prefill_len: request outputs must not depend on
+                  # wave composition, so the one wave-dependent shape is fixed
+
+
+def _model(arch):
+    cfg = smoke_config(arch)
+    model = get_model(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _alone(model, params, prompt, budget, sampling=None, **kw):
+    eng = ServeEngine(model, params, **kw)
+    rid = eng.submit(prompt, budget, sampling=sampling)
+    eng.run()
+    return eng.result(rid)
+
+
+def _prompts(cfg, lens, seed=1):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab, (n,)).astype(np.int32) for n in lens]
+
+
+def test_staggered_arrivals_match_single_request_runs():
+    """4 ragged requests through 2 slots, arriving and finishing at
+    different steps (budgets differ); one uses temperature+top-k sampling.
+    Every output must equal the same request run alone."""
+    cfg, model, params = _model("stablelm_12b")
+    kw = dict(max_len=64, n_slots=2, prefill_len=PF)
+    prompts = _prompts(cfg, (5, 9, 7, 12))
+    budgets = [8, 5, 10, 6]
+    samplings = [None, None, None,
+                 SamplingParams(temperature=0.7, top_k=5, seed=42)]
+
+    eng = ServeEngine(model, params, **kw)
+    r0 = eng.submit(prompts[0], budgets[0])
+    r1 = eng.submit(prompts[1], budgets[1])
+    eng.step()
+    eng.step()
+    r2 = eng.submit(prompts[2], budgets[2])          # mid-flight arrival
+    eng.step()
+    r3 = eng.submit(prompts[3], budgets[3], sampling=samplings[3])
+    eng.run()
+
+    for i, rid in enumerate((r0, r1, r2, r3)):
+        got = eng.result(rid)
+        assert got.size == budgets[i]
+        alone = _alone(model, params, prompts[i], budgets[i],
+                       sampling=samplings[i], **kw)
+        np.testing.assert_array_equal(got, alone, err_msg=f"request {i}")
+
+
+@pytest.mark.parametrize("arch", ["hymba_15b", "mamba2_130m"])
+def test_ring_and_ssm_cache_staggered_parity(arch):
+    """The slot discipline must hold for every cache kind: hymba = ring KV
+    (window < max_len) + SSM state, mamba2 = pure constant-size SSM."""
+    cfg, model, params = _model(arch)
+    kw = dict(max_len=48, n_slots=2, prefill_len=11)
+    prompts = _prompts(cfg, (4, 11, 7), seed=2)
+    budgets = [7, 4, 6]
+
+    eng = ServeEngine(model, params, **kw)
+    rids = [eng.submit(prompts[0], budgets[0]),
+            eng.submit(prompts[1], budgets[1])]
+    eng.step()
+    eng.step()
+    rids.append(eng.submit(prompts[2], budgets[2]))
+    eng.run()
+
+    for i, rid in enumerate(rids):
+        alone = _alone(model, params, prompts[i], budgets[i], **kw)
+        np.testing.assert_array_equal(eng.result(rid), alone,
+                                      err_msg=f"{arch} request {i}")
+
+
+def test_early_eos_pads_output_with_eos_id():
+    """Regression (ISSUE 2): the old engine initialized the output buffer
+    with 0 — a valid token id — so early-finished rows read as if they had
+    generated token 0 forever."""
+    cfg, model, params = _model("stablelm_12b")
+    kw = dict(max_len=64, n_slots=2, prefill_len=PF)
+    prompts = _prompts(cfg, (6, 8), seed=3)
+
+    eng = ServeEngine(model, params, **kw)
+    ref = eng.generate(prompts, 8)
+    # pick an eos that request 0 emits mid-stream and request 1 never does
+    pos = next(i for i in range(1, 8) if ref[0, i] not in ref[1])
+    eos = int(ref[0, pos])
+    assert eos != 0, "need a nonzero eos for the regression to bite"
+
+    eng2 = ServeEngine(model, params, eos_id=eos, **kw)
+    out = eng2.generate(prompts, 8)
+    np.testing.assert_array_equal(out[0, :pos + 1], ref[0, :pos + 1])
+    assert (out[0, pos:] == eos).all()      # eos kept + eos-padded, not 0
+    np.testing.assert_array_equal(out[1], ref[1])
+
+    # the freed slot is re-admissible: a queued request takes it over
+    eng3 = ServeEngine(model, params, eos_id=eos, **kw)
+    rids = [eng3.submit(p, 8) for p in prompts + prompts]  # 4 reqs, 2 slots
+    eng3.run()
+    np.testing.assert_array_equal(eng3.result(rids[2]), eng3.result(rids[0]))
+
+
+@pytest.mark.parametrize("arch", ["stablelm_12b", "hymba_15b", "mamba2_130m"])
+def test_ragged_prefill_matches_unpadded_ground_truth(arch):
+    """The ragged machinery itself (last-valid logits gather, SSM dt=0
+    freeze + conv-tail gather, per-request ring fill) must agree with an
+    UNPADDED prefill of each prompt — not merely with another padded run
+    through the same code path."""
+    cfg, model, params = _model(arch)
+    max_len = 48
+    # hymba: one prompt LONGER than the window (32) so the per-request
+    # ring-gather path is exercised, not just the pad-to-window branch
+    lens = [5, 35, 20] if arch == "hymba_15b" else [5, 13, 9]
+    prompts = _prompts(cfg, lens, seed=5)
+    padded = np.zeros((3, max(lens)), np.int32)
+    for i, p in enumerate(prompts):
+        padded[i, :p.size] = p
+    lg, cache = model.prefill(params, {"tokens": jnp.asarray(padded)},
+                              max_len=max_len,
+                              lengths=jnp.asarray(lens, jnp.int32))
+    for i, p in enumerate(prompts):
+        lg1, c1 = model.prefill(params, {"tokens": jnp.asarray(p[None])},
+                                max_len=max_len)
+        np.testing.assert_allclose(lg[i:i + 1], lg1, atol=1e-4,
+                                   err_msg=f"{arch} prefill logits row {i}")
+        # decoding one token from each cache must also agree (checks that
+        # the cache state — KV rows / ring slots / SSM state / conv tails —
+        # froze at the right position, not just the logits gather)
+        nxt = jnp.argmax(lg1[:, -1], -1).astype(jnp.int32)[:, None]
+        d0, _ = model.decode(params, c1, nxt)
+        ci = jax.tree.map(lambda x: x[i:i + 1] if x.ndim == 1
+                          else x[:, i:i + 1], cache)
+        d1, _ = model.decode(params, ci, nxt)
+        np.testing.assert_allclose(d1, d0, atol=1e-4,
+                                   err_msg=f"{arch} decode-after row {i}")
+
+
+def test_ring_and_ssm_accept_prompts_longer_than_max_len():
+    """Ring-KV keeps the last `window` keys and SSM state is constant-size,
+    so submit() must not cap their prompts at the slot segment length."""
+    for arch in ("hymba_15b", "mamba2_130m"):
+        cfg, model, params = _model(arch)
+        eng = ServeEngine(model, params, max_len=40, n_slots=2)
+        rng = np.random.RandomState(6)
+        long_prompt = rng.randint(0, cfg.vocab, (55,)).astype(np.int32)
+        rid = eng.submit(long_prompt, 4)
+        eng.run()
+        assert eng.result(rid).size == 4
+
+
+def test_generate_accepts_ragged_prompt_lists():
+    cfg, model, params = _model("stablelm_12b")
+    eng = ServeEngine(model, params, max_len=64, n_slots=2, prefill_len=PF)
+    prompts = _prompts(cfg, (3, 12, 5), seed=4)
+    out = eng.generate(prompts, 6)
+    assert out.shape == (3, 6) and out.dtype == np.int32
+    alone = _alone(model, params, prompts[1], 6, max_len=64, n_slots=2,
+                   prefill_len=PF)
+    np.testing.assert_array_equal(out[1], alone)
+
+
+class TestSampling:
+    def test_greedy_topk1_and_vocab_mask(self):
+        logits = jnp.asarray([[0.1, 3.0, 2.0, 9.0],
+                              [5.0, -1.0, 0.0, 7.0]])
+        keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+        zeros = jnp.zeros((2,))
+        # temperature 0 -> argmax
+        tok, _ = sample_tokens(logits, zeros, jnp.zeros((2,), jnp.int32),
+                               keys, 4)
+        np.testing.assert_array_equal(tok, [3, 3])
+        # top_k=1 with temperature > 0 -> still argmax
+        tok, _ = sample_tokens(logits, zeros + 1.0,
+                               jnp.ones((2,), jnp.int32), keys, 4)
+        np.testing.assert_array_equal(tok, [3, 3])
+        # TP-padded vocab rows (id >= vocab) can never be emitted
+        tok, _ = sample_tokens(logits, zeros, jnp.zeros((2,), jnp.int32),
+                               keys, 3)
+        np.testing.assert_array_equal(tok, [1, 0])
+
+    def test_key_chain_is_per_slot_and_reproducible(self):
+        logits = jnp.ones((2, 16))
+        temps = jnp.full((2,), 1.0)
+        topks = jnp.zeros((2,), jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(7), jax.random.PRNGKey(7)])
+        t1, k1 = sample_tokens(logits, temps, topks, keys, 16)
+        t2, _ = sample_tokens(logits, temps, topks, k1, 16)
+        # same seed in both slots -> identical streams slot-wise
+        assert int(t1[0]) == int(t1[1]) and int(t2[0]) == int(t2[1])
+        # chain advances
+        r1, _ = sample_tokens(logits, temps, topks, keys, 16)
+        np.testing.assert_array_equal(t1, r1)   # same key -> same draw
+
+
+def test_fifo_scheduler_order_and_take():
+    sched = FIFOScheduler()
+    for i in range(5):
+        sched.add(Request(i, np.array([1, 2], np.int32), 4))
+    assert len(sched) == 5
+    wave = sched.take(2)
+    assert [r.rid for r in wave] == [0, 1]
+    assert [r.rid for r in sched.take(10)] == [2, 3, 4]
+    assert sched.take(3) == [] and len(sched) == 0
