@@ -1,11 +1,22 @@
 """Kernel-level A/B (paper Fig. 5, "implementation choices"): the XLA chunked
-path vs the Pallas kernel in interpret mode (numerical parity + call cost).
+path vs the Pallas kernel in interpret mode (numerical parity + call cost),
+plus the paper's HEADLINE A/B — dense-bias attention vs FlashBias factored
+bias — emitted as ``BENCH_kernels.json`` at the repo root (the kernel half
+of the perf trajectory, next to ``BENCH_serve.json``).
 
 interpret=True runs the kernel body in Python — its wall time is NOT TPU
-performance; the number that matters here is allclose parity and the block
-configuration that the TPU deployment will use (block_q=block_k=128).
+performance; the number that matters there is allclose parity and the block
+configuration that the TPU deployment will use (block_q=block_k=128). The
+dense-vs-factored A/B times two fully-jitted XLA paths of the SAME workload,
+so its ratio is a meaningful relative trend even on CPU
+(benchmarks/common.py caveat).
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke] [--out PATH]
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -15,10 +26,42 @@ from benchmarks.common import Row, time_fn
 from repro.core import bias as bias_mod
 from repro.kernels import ops, ref
 
+DEFAULT_OUT = "BENCH_kernels.json"
 
-def run():
+
+def _dense_vs_factored(n: int, rank: int) -> dict:
+    """Same attention workload, dense (H, N, N) bias vs rank-R factors."""
+    b, h, d = 1, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = jax.random.normal(ks[0], (b, n, h, d))
+    k = jax.random.normal(ks[1], (b, n, h, d))
+    v = jax.random.normal(ks[2], (b, n, h, d))
+    pq = jax.random.normal(ks[3], (b, n, h, rank))
+    pk = jax.random.normal(ks[4], (b, n, h, rank))
+    dense = jnp.einsum("bnhr,bmhr->bhnm", pq, pk)     # materialized bias
+
+    from repro.core.attention import MaskSpec, attention
+    dense_fn = jax.jit(lambda q, k, v, bias: attention(
+        q, k, v, mask=MaskSpec("causal"), bias=bias, impl="chunked",
+        chunk_size=128))
+    fact_fn = jax.jit(lambda q, k, v, pq, pk: ops.flash_attention(
+        q, k, v, pq, pk, mask_kind="causal", impl="xla"))
+
+    t_dense = time_fn(dense_fn, q, k, v, dense)
+    t_fact = time_fn(fact_fn, q, k, v, pq, pk)
+    err = float(jnp.abs(dense_fn(q, k, v, dense)
+                        - fact_fn(q, k, v, pq, pk)).max())
+    return {"seq_len": n, "heads": h, "head_dim": d, "rank": rank,
+            "dense_bias_us": t_dense * 1e6,
+            "factored_bias_us": t_fact * 1e6,
+            "speedup": t_dense / max(t_fact, 1e-12),
+            "max_abs_err": err}
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
     rows = []
-    b, n, h, kvh, d = 1, 256, 4, 2, 64
+    n = 128 if smoke else 256
+    b, h, kvh, d = 1, 4, 2, 64
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (b, n, h, d))
     k = jax.random.normal(ks[1], (b, n, kvh, d))
@@ -40,19 +83,45 @@ def run():
                     f"max_err={err:.2e} (blocks 128x128, TPU target)"))
 
     # decode kernel parity at production block size
-    s = 512
+    s = 256 if smoke else 512
     kc = jax.random.normal(ks[1], (2, s, kvh, d))
     vc = jax.random.normal(ks[2], (2, s, kvh, d))
     q1 = jax.random.normal(ks[0], (2, 1, h, d))
-    lengths = jnp.array([317, 512], jnp.int32)
+    lengths = jnp.array([s - 195, s], jnp.int32)
     o_k = ops.flash_decode(q1, kc, vc, lengths, slopes=slopes,
                            impl="pallas_interpret", block_k=128)
     o_r = ref.decode_reference(q1, kc, vc, lengths, slopes=slopes)
     rows.append(Row("decode_kernel_parity", 0.0,
                     f"max_err={float(jnp.abs(o_k - o_r).max()):.2e}"))
+
+    # HEADLINE: dense-bias vs factored-bias cost of the same workload
+    ab = _dense_vs_factored(n=n, rank=8 if smoke else 16)
+    rows.append(Row("attn_dense_bias", ab["dense_bias_us"],
+                    f"materialized (H,{n},{n}) bias"))
+    rows.append(Row("attn_factored_bias", ab["factored_bias_us"],
+                    f"rank-{ab['rank']} factors, "
+                    f"{ab['speedup']:.2f}x vs dense"))
+
+    payload = {"dense_vs_factored": ab,
+               "parity": {"fig5_pallas_max_err": err,
+                          "decode_kernel_max_err":
+                          float(jnp.abs(o_k - o_r).max())}}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
     return rows
 
 
-if __name__ == "__main__":
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    rows = run(out_path=args.out, smoke=args.smoke)
     from benchmarks.common import print_rows
-    print_rows(run())
+    print_rows(rows)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,14 @@ DEFAULT_OUT = "BENCH_serve.json"
 
 def collect(arch: str = "stablelm_12b", n_slots: int = 8,
             prompt_len: int = 32, steps: int = 12,
-            occupancies=(1, 4, 8)) -> dict:
-    """Run the engine at each occupancy; returns the BENCH_serve payload."""
+            occupancies=(1, 4, 8), page_size: int = 0) -> dict:
+    """Run the engine at each occupancy; returns the BENCH_serve payload.
+
+    ``page_size`` > 0 measures the PAGED engine (pool sized to the same HBM
+    as the contiguous layout, table width = one contiguous segment so the
+    per-step logical view matches) — emitted as ``paged_points`` next to
+    the contiguous ``points`` headline.
+    """
     from repro.configs import smoke_config
     from repro.models import get_model
     from repro.models.common import init_params
@@ -39,8 +45,14 @@ def collect(arch: str = "stablelm_12b", n_slots: int = 8,
     model = get_model(cfg)
     params = init_params(model.template(), jax.random.PRNGKey(0))
     budget = steps + 4                       # never finishes mid-measurement
-    engine = ServeEngine(model, params, max_len=prompt_len + budget + 8,
-                         n_slots=n_slots, prefill_len=prompt_len)
+    max_len = prompt_len + budget + 8
+    kw = {}
+    if page_size:
+        max_len = -(-max_len // page_size) * page_size
+        kw = dict(page_size=page_size,
+                  pages_per_slot=max_len // page_size)
+    engine = ServeEngine(model, params, max_len=max_len,
+                         n_slots=n_slots, prefill_len=prompt_len, **kw)
     rng = np.random.default_rng(0)
 
     def submit(n):
@@ -79,17 +91,22 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
     kw = (dict(n_slots=4, prompt_len=16, steps=8, occupancies=(1, 2, 4))
           if smoke else {})
     data = collect(**kw)
+    ps = 16 if smoke else 64
+    data["page_size"] = ps
+    data["paged_points"] = collect(page_size=ps, **kw)["points"]
     with open(out_path, "w") as f:
         json.dump(data, f, indent=2)
     rows = []
-    for p in data["points"]:
-        occ = p["occupancy"]
-        rows.append(Row(f"serve_prefill_occ{occ}",
-                        1e6 / max(p["prefill_tokens_per_s"], 1e-9),
-                        f"{p['prefill_tokens_per_s']:.1f}tok/s"))
-        rows.append(Row(f"serve_decode_occ{occ}",
-                        1e6 / max(p["decode_tokens_per_s"], 1e-9),
-                        f"{p['decode_tokens_per_s']:.1f}tok/s"))
+    for tag, points in (("", data["points"]),
+                        ("_paged", data["paged_points"])):
+        for p in points:
+            occ = p["occupancy"]
+            rows.append(Row(f"serve_prefill{tag}_occ{occ}",
+                            1e6 / max(p["prefill_tokens_per_s"], 1e-9),
+                            f"{p['prefill_tokens_per_s']:.1f}tok/s"))
+            rows.append(Row(f"serve_decode{tag}_occ{occ}",
+                            1e6 / max(p["decode_tokens_per_s"], 1e-9),
+                            f"{p['decode_tokens_per_s']:.1f}tok/s"))
     return rows
 
 

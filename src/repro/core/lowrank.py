@@ -36,16 +36,27 @@ def energy_profile(mat: jax.Array) -> jax.Array:
 
 
 def rank_for_energy(mat: jax.Array, energy: float = 0.99) -> int:
-    """Smallest rank retaining ``energy`` fraction of squared singular values."""
+    """Smallest rank retaining ``energy`` fraction of squared singular values.
+
+    Never exceeds the spectrum length min(N, M): an all-zero matrix has a
+    zero energy profile (every entry < energy), which used to count out to
+    min(N, M) + 1 — a rank no factorization can have.
+    """
     prof = np.asarray(energy_profile(mat))
     # batched: use the worst (max) rank over the batch so every slice is covered.
     flat = prof.reshape(-1, prof.shape[-1])
-    ranks = (flat < energy).sum(axis=-1) + 1
+    ranks = np.minimum((flat < energy).sum(axis=-1) + 1, flat.shape[-1])
     return int(ranks.max())
 
 
 def retained_energy(mat: jax.Array, rank: int) -> float:
-    """Energy fraction retained by the best rank-``rank`` approximation."""
+    """Energy fraction retained by the best rank-``rank`` approximation.
+
+    ``rank <= 0`` retains nothing (the old ``rank - 1`` indexing wrapped to
+    the LAST profile entry and reported full energy for rank 0).
+    """
+    if rank <= 0:
+        return 0.0
     prof = np.asarray(energy_profile(mat))
     flat = prof.reshape(-1, prof.shape[-1])
     idx = min(rank, flat.shape[-1]) - 1

@@ -15,6 +15,17 @@ One new token per request attends to a cache of up to S keys. TPU adaptation:
   cache at (block_k, R) — rank-R bias costs R/D extra MXU depth, never NM IO.
 - ``slopes`` mode generates the rank-2 ALiBi bias in-kernel (App. C JIT
   trick): zero bias IO at all.
+
+``flash_decode_paged_fwd`` is the PAGED variant: the KV cache (and the
+per-page ``phi_k`` factor slab) lives in a shared page pool and each
+request's pages are resolved through a scalar-prefetched page table. The
+kernel BODY is shared with the contiguous path — grid axis j is the
+*logical* block index (page_size == block_k), so position math and the
+length-based block skipping are unchanged; only the block index maps
+differ (they read ``page_table[b, j]`` to find the physical page). Blocks
+past the request length clamp to the last mapped page, so skipped and
+unmapped pages alias the previous block's index and their copies are
+elided on hardware exactly like the contiguous path's skipped blocks.
 """
 from __future__ import annotations
 
@@ -28,7 +39,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.attention import DEFAULT_MASK_VALUE
 
-__all__ = ["flash_decode_fwd"]
+__all__ = ["flash_decode_fwd", "flash_decode_paged_fwd"]
 
 
 def _decode_kernel(
@@ -161,4 +172,93 @@ def flash_decode_fwd(
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dv), q.dtype),
         interpret=interpret,
     )(lengths.astype(jnp.int32), *args)
+    return out
+
+
+def _paged_decode_kernel(lengths_ref, page_table_ref, *rest, **kw):
+    # page resolution happens entirely in the block index maps; the body is
+    # the contiguous kernel verbatim (j stays the LOGICAL block index)
+    del page_table_ref
+    _decode_kernel(lengths_ref, *rest, **kw)
+
+
+def flash_decode_paged_fwd(
+    q: jax.Array,                         # (B, KVH, G, D)
+    k_pages: jax.Array,                   # (KVH, n_pages, ps, D)
+    v_pages: jax.Array,                   # (KVH, n_pages, ps, Dv)
+    lengths: jax.Array,                   # (B,) int32
+    page_table: jax.Array,                # (B, P) int32 page ids
+    phi_q: Optional[jax.Array] = None,    # (B, KVH, G, R)
+    phi_pages: Optional[jax.Array] = None,  # (KVH, n_pages, ps, R)
+    slopes: Optional[jax.Array] = None,   # (KVH, G)
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged decode kernel: block_k == page_size, pages via scalar prefetch.
+
+    ``page_table[b, j]`` holds the physical page of request b's j-th logical
+    block; entries past the request's mapped prefix may be anything (they
+    are clamped to the last in-length block, whose compute ``pl.when``
+    skips). Every page id is clamped into the pool, so a stale table can
+    never fault — at worst it reads a page the length mask then discards.
+    """
+    b, kvh, g, d = q.shape
+    n_pages, ps = k_pages.shape[1], k_pages.shape[2]
+    p_max = page_table.shape[1]
+    dv = v_pages.shape[-1]
+    bias_mode = ("phi" if phi_q is not None
+                 else ("alibi" if slopes is not None else "none"))
+
+    def page_map(b_, h_, j, lens_ref, pt_ref):
+        # clamp j to the last in-length block so skipped/unmapped blocks
+        # alias the previous DMA; clamp the id so stale tables stay in-pool
+        last = jnp.maximum(lens_ref[b_] - 1, 0) // ps
+        page = pt_ref[b_, jnp.minimum(j, last)]
+        return (h_, jnp.clip(page, 0, n_pages - 1), 0, 0)
+
+    grid = (b, kvh, p_max)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h_, j, *_: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, ps, d), page_map),
+        pl.BlockSpec((1, 1, ps, dv), page_map),
+    ]
+    args = [q, k_pages, v_pages]
+    if bias_mode == "phi":
+        r = phi_q.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, 1, g, r), lambda b_, h_, j, *_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, ps, r), page_map),
+        ]
+        args += [phi_q, phi_pages]
+    else:
+        in_specs += [None, None]
+        args += [None, None]
+    if bias_mode == "alibi":
+        in_specs.append(pl.BlockSpec((1, g), lambda b_, h_, j, *_: (h_, 0)))
+        args.append(slopes)
+    else:
+        in_specs.append(None)
+        args.append(None)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, block_k=ps,
+                               bias_mode=bias_mode)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b_, h_, j, *_: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dv), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), *args)
     return out

@@ -221,18 +221,35 @@ def flash_attention(
 
 def flash_decode(
     q: jax.Array,                        # (B, 1, H, D)
-    k_cache: jax.Array,                  # (B, S, KVH, D)
-    v_cache: jax.Array,                  # (B, S, KVH, Dv)
+    k_cache: jax.Array,                  # (B, S, KVH, D); paged: (P, ps, KVH, D)
+    v_cache: jax.Array,                  # (B, S, KVH, Dv); paged: (P, ps, KVH, Dv)
     lengths: jax.Array,                  # (B,) int32
     phi_q: Optional[jax.Array] = None,   # (B, 1, H, R)
-    phi_k: Optional[jax.Array] = None,   # (B, S, KVH|H|1, R)
+    phi_k: Optional[jax.Array] = None,   # (B, S, KVH|H|1, R);
+                                         # paged slab: (P, ps, R) | (P, ps, KVH, R)
     slopes: Optional[jax.Array] = None,  # (H,)
     *,
     scale: Optional[float] = None,
     impl: str = "auto",
     block_k: int = 512,
+    page_table: Optional[jax.Array] = None,  # (B, P_slot) int32 -> paged mode
 ) -> jax.Array:
-    """Single-token decode against a KV cache. Returns (B, 1, H, Dv)."""
+    """Single-token decode against a KV cache. Returns (B, 1, H, Dv).
+
+    With ``page_table`` the caches are a shared PAGE POOL: ``k_cache`` /
+    ``v_cache`` are ``(n_pages, page_size, KVH, *)`` and ``phi_k`` (if any)
+    is the per-page factor slab — ``(n_pages, page_size, R)`` shared across
+    kv heads or ``(n_pages, page_size, KVH, R)``. ``page_table[b, j]`` maps
+    request b's j-th logical block to its physical page; entries beyond the
+    mapped prefix are ignored (clamped + length-masked). The Pallas path
+    resolves pages through scalar-prefetched block index maps (skipped and
+    unmapped pages alias their neighbour's copy); the XLA/io_stub paths
+    gather the pool into each request's logical view first.
+    """
+    if page_table is not None:
+        return _flash_decode_paged(q, k_cache, v_cache, lengths, page_table,
+                                   phi_q, phi_k, slopes, scale=scale,
+                                   impl=impl, block_k=block_k)
     b, _, h, d = q.shape
     s_len, kvh = k_cache.shape[1], k_cache.shape[2]
     dv = v_cache.shape[-1]
@@ -297,19 +314,22 @@ def flash_decode(
     if phi_q is not None:
         r = phi_q.shape[-1]
         r_p = _ceil_to(r, _LANE)
-        pqt = to_grouped_q(phi_q, r_p)
         # The grouped-key layout carries ONE key factor per kv head:
-        # per-kv-head (B, S, KVH, R) rides as-is, head-shared broadcasts,
-        # and a per-q-head factor is only valid when shared within each
-        # group (take the group's first head).
+        # per-kv-head (B, S, KVH, R) rides as-is, head-shared broadcasts.
+        # PER-Q-HEAD factors (B, S, H, R) can differ within a GQA group,
+        # which the grouped layout cannot express — route to the XLA path
+        # (the old code silently took each group's first head: ISSUE 3).
         kvh_pk = phi_k.shape[2]
+        if kvh_pk not in (kvh, 1):
+            assert kvh_pk == h, (phi_k.shape, h, kvh)
+            return flash_decode(q, k_cache, v_cache, lengths, phi_q, phi_k,
+                                slopes, scale=scale, impl="xla",
+                                block_k=block_k)
+        pqt = to_grouped_q(phi_q, r_p)
         if kvh_pk == kvh:
             pk_kv = phi_k
-        elif kvh_pk == 1:
-            pk_kv = jnp.broadcast_to(phi_k, (b, s_len, kvh, r))
         else:
-            assert kvh_pk == h, (phi_k.shape, h, kvh)
-            pk_kv = phi_k.reshape(b, s_len, kvh, g, r)[:, :, :, 0]
+            pk_kv = jnp.broadcast_to(phi_k, (b, s_len, kvh, r))
         pkt = to_cache(pk_kv, r_p)
     slopes_g = None
     if slopes is not None:
@@ -320,3 +340,67 @@ def flash_decode(
         block_k=block_k, interpret=(impl == "pallas_interpret"))
     out = out[:, :, :g, :dv].reshape(b, 1, h, dv)
     return out
+
+
+def _flash_decode_paged(q, k_pages, v_pages, lengths, page_table,
+                        phi_q, phi_k, slopes, *, scale, impl, block_k):
+    """Paged dispatch for ``flash_decode`` (see its docstring for layouts)."""
+    b, _, h, d = q.shape
+    n_pages, ps, kvh = k_pages.shape[:3]
+    dv = v_pages.shape[-1]
+    p_slot = page_table.shape[1]
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    impl = _resolve_impl(impl)
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, n_pages - 1)
+
+    if impl in ("xla", "io_stub"):
+        # gather each request's pages into its logical contiguous view and
+        # reuse the contiguous path (masking past ``lengths`` is identical)
+        def view(pool):
+            g = pool[pt]                          # (B, P_slot, ps, KVH, E)
+            return g.reshape(b, p_slot * ps, *pool.shape[2:])
+        phi_view = None
+        if phi_k is not None:
+            slab = phi_k if phi_k.ndim == 4 else phi_k[:, :, None, :]
+            phi_view = view(slab)                 # (B, S_view, KVH|1, R)
+        return flash_decode(q, view(k_pages), view(v_pages), lengths,
+                            phi_q, phi_view, slopes, scale=scale, impl=impl,
+                            block_k=block_k)
+
+    # Pallas path: pools go kv-head-major, pages resolved in the kernel's
+    # scalar-prefetch block index maps (no gather, no view materialization).
+    g = h // kvh
+    d_p, dv_p = _ceil_to(d, _LANE), _ceil_to(dv, _LANE)
+    g_p = _ceil_to(g, 8)
+
+    def to_grouped_q(x, last_p):
+        x = x[:, 0].reshape(b, kvh, g, x.shape[-1])
+        return _pad_axis(_pad_axis(x, 2, g_p), 3, last_p)
+
+    def to_pool(x, last_p):
+        # (n_pages, ps, KVH, E) -> (KVH, n_pages, ps, E_pad)
+        return _pad_axis(x.transpose(2, 0, 1, 3), 3, last_p)
+
+    qt = to_grouped_q(q, d_p)
+    kt = to_pool(k_pages, d_p)
+    vt = to_pool(v_pages, dv_p)
+    pqt = pkt = None
+    if phi_q is not None:
+        r = phi_q.shape[-1]
+        r_p = _ceil_to(r, _LANE)
+        assert phi_q.shape[2] in (h, kvh), (phi_q.shape, h, kvh)
+        if phi_q.shape[2] == kvh and kvh != h:    # shared within each group
+            phi_q = jnp.repeat(phi_q, g, axis=2)
+        pqt = to_grouped_q(phi_q, r_p)
+        slab = phi_k if phi_k.ndim == 4 else phi_k[:, :, None, :]
+        assert slab.shape[2] in (kvh, 1), (phi_k.shape, kvh)
+        slab = jnp.broadcast_to(slab, (n_pages, ps, kvh, r))
+        pkt = to_pool(slab, r_p)
+    slopes_g = None
+    if slopes is not None:
+        slopes_g = _pad_axis(slopes.reshape(kvh, g), 1, g_p)
+
+    out = _fd.flash_decode_paged_fwd(
+        qt, kt, vt, lengths, pt, pqt, pkt, slopes_g, scale=scale,
+        interpret=(impl == "pallas_interpret"))
+    return out[:, :, :g, :dv].reshape(b, 1, h, dv)

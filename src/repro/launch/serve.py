@@ -31,14 +31,25 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="> 0: paged KV — shared page pool + page tables "
+                         "instead of per-slot max_len segments")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params = init_params(model.template(), jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.new_tokens + 8,
-                         n_slots=args.slots, prefill_len=args.prompt_len)
+    max_len = args.prompt_len + args.new_tokens + 8
+    kw = {}
+    if args.page_size:
+        # every request fits max_len here by construction, so cap the page
+        # table at the per-slot segment footprint — the paged logical view
+        # (and the XLA gather) stays the size of one contiguous segment
+        kw = dict(page_size=args.page_size,
+                  pages_per_slot=-(-max_len // args.page_size))
+    engine = ServeEngine(model, params, max_len=max_len,
+                         n_slots=args.slots, prefill_len=args.prompt_len,
+                         **kw)
 
     rng = np.random.default_rng(args.seed)
     lens = rng.integers(4, args.prompt_len + 1, (args.requests,))

@@ -11,6 +11,12 @@
 - ``init_cache(batch, max_len)``     — zeroed cache pytree,
 - ``insert_cache(dst, src, slots)``  — scatter prefilled wave rows into the
   serve engine's slot cache (out-of-range slot ids are dropped),
+- ``init_paged_cache(batch, n_pages, page_size, pages_per_slot)`` — zeroed
+  PAGED cache (shared K/V/phi-factor page pool + per-slot page tables) for
+  full-KV decode families,
+- ``insert_paged(dst, src, slots, tables)`` — scatter a prefilled wave into
+  the paged cache whole pages at a time (``tables`` carries each row's
+  page-table row; out-of-range page/slot ids are dropped),
 - ``input_specs(shape)``             — ShapeDtypeStruct stand-ins for every
   model input of an assigned (shape) cell: weak-type-correct, shardable,
   never allocated. This is what the multi-pod dry-run lowers against.
@@ -38,6 +44,8 @@ class Model:
     decode: Optional[Callable] = None
     init_cache: Optional[Callable] = None
     insert_cache: Optional[Callable] = None
+    init_paged_cache: Optional[Callable] = None
+    insert_paged: Optional[Callable] = None
     input_specs: Optional[Callable] = None
 
 
@@ -80,6 +88,12 @@ def _lm_model(cfg: ArchConfig) -> Model:
         init_cache=lambda b, max_len, length=0: lm.init_cache(
             cfg, b, max_len, length=length),
         insert_cache=lm.insert_cache_at_slots,
+        init_paged_cache=(
+            (lambda b, n_pages, page_size, pages_per_slot=None:
+             lm.init_paged_cache(cfg, b, n_pages, page_size, pages_per_slot))
+            if cfg.family in ("dense", "moe", "hybrid") else None),
+        insert_paged=(lm.insert_paged_cache_at_slots
+                      if cfg.family in ("dense", "moe", "hybrid") else None),
         input_specs=input_specs,
     )
 

@@ -34,7 +34,8 @@ from repro.models.common import (PDef, cross_entropy_loss, embed_lookup,
                                  unembed_logits)
 
 __all__ = ["lm_template", "loss_fn", "prefill", "decode_step", "init_cache",
-           "insert_cache_at_slots", "forward_hidden"]
+           "init_paged_cache", "insert_cache_at_slots",
+           "insert_paged_cache_at_slots", "forward_hidden"]
 
 
 # ---------------------------------------------------------------------------
@@ -169,33 +170,71 @@ def _attention(lp: dict, x: jax.Array, cfg: ArchConfig, *,
 
 
 def _attention_decode(lp: dict, x: jax.Array, k_cache, v_cache, lengths,
-                      cfg: ArchConfig):
-    """One-token attention against a (possibly ring) cache."""
+                      cfg: ArchConfig, *, active=None, page_table=None,
+                      phi_pages=None):
+    """One-token attention against a (ring / full / paged) cache.
+
+    ``active`` (B,) bool freezes retired slot rows: their KV writes are
+    dropped (scatter index pushed out of range, ``mode="drop"``) so an idle
+    lane can never scribble on cache it no longer owns — under the paged
+    layout a stale page table would otherwise corrupt pages that have been
+    reallocated to ANOTHER request.
+
+    Paged mode (``page_table`` given): ``k_cache``/``v_cache`` are page
+    pools ``(n_pages, page_size, KVH, hd)`` and the new token is written
+    through the slot's page table. ``phi_pages`` is the per-page ALiBi key
+    factor slab ``(n_pages, page_size, 2)``; when present the bias is
+    computed from the CACHED factors (phi mode — factors ride with k,
+    FlashBias Sec. 4.3) instead of re-materializing positions.
+    """
     dt = x.dtype
     q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
     k_new = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
     v_new = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
     slopes = (lp["slopes"].astype(jnp.float32)
               if cfg.bias_kind == "alibi" else None)
-    sc = k_cache.shape[1]
+    bidx = jnp.arange(x.shape[0])
+
+    def drop_if_frozen(idx, oob):
+        return idx if active is None else jnp.where(active, idx, oob)
 
     # io_stub (dry-run accounting only): the donated cache is updated
     # IN PLACE on hardware (one row written); the functional `.at[].set`
     # would count a full cache read+write per layer in cost_analysis.
     skip_scatter = cfg.attn_impl == "io_stub"
-    if cfg.window and cfg.window == sc:            # ring (sliding window)
-        slot = (lengths - 1) % sc                  # position of the new token
-        bidx = jnp.arange(x.shape[0])
-        if not skip_scatter:
-            k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
-            v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
-        o = _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg)
-    else:                                          # full cache
+    if page_table is not None:                     # paged full cache
+        n_pages, ps = k_cache.shape[0], k_cache.shape[1]
         pos = lengths - 1
-        bidx = jnp.arange(x.shape[0])
+        page = drop_if_frozen(page_table[bidx, pos // ps], n_pages)
         if not skip_scatter:
-            k_cache = k_cache.at[bidx, pos].set(k_new[:, 0])
-            v_cache = v_cache.at[bidx, pos].set(v_new[:, 0])
+            k_cache = k_cache.at[page, pos % ps].set(k_new[:, 0], mode="drop")
+            v_cache = v_cache.at[page, pos % ps].set(v_new[:, 0], mode="drop")
+        phi_q = phi_k = None
+        if slopes is not None and phi_pages is not None:
+            # same rank-2 q factor the ops ALiBi path materializes; the key
+            # factors come from the paged slab instead
+            b, hp = x.shape[0], q.shape[2]
+            qpos = (lengths.astype(jnp.float32) - 1.0)[:, None, None, None]
+            pq = jnp.concatenate([-jnp.broadcast_to(qpos, (b, 1, hp, 1)),
+                                  jnp.ones((b, 1, hp, 1), jnp.float32)], -1)
+            phi_q = pq * slopes.reshape(1, 1, hp, 1)
+            phi_k, slopes = phi_pages, None
+        o = kops.flash_decode(q, k_cache, v_cache, lengths, phi_q=phi_q,
+                              phi_k=phi_k, slopes=slopes, impl=cfg.attn_impl,
+                              block_k=cfg.attn_chunk, page_table=page_table)
+    elif cfg.window and cfg.window == k_cache.shape[1]:  # ring (sliding win)
+        sc = k_cache.shape[1]
+        slot = drop_if_frozen((lengths - 1) % sc, sc)
+        if not skip_scatter:
+            k_cache = k_cache.at[bidx, slot].set(k_new[:, 0], mode="drop")
+            v_cache = v_cache.at[bidx, slot].set(v_new[:, 0], mode="drop")
+        o = _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg)
+    else:                                          # contiguous full cache
+        sc = k_cache.shape[1]
+        pos = drop_if_frozen(lengths - 1, sc)
+        if not skip_scatter:
+            k_cache = k_cache.at[bidx, pos].set(k_new[:, 0], mode="drop")
+            v_cache = v_cache.at[bidx, pos].set(v_new[:, 0], mode="drop")
         o = kops.flash_decode(q, k_cache, v_cache, lengths, slopes=slopes,
                               impl=cfg.attn_impl, block_k=cfg.attn_chunk)
     y = jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(dt))
@@ -462,17 +501,26 @@ def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig, lengths=None):
 
 
 def _layer_decode(lp: dict, cache_l: dict, x: jax.Array, lengths,
-                  cfg: ArchConfig):
+                  cfg: ArchConfig, *, active=None, page_table=None,
+                  phi_pages=None):
     new_cache = dict(cache_l)
     h = rmsnorm(x, lp["ln1"])
     if cfg.family in ("dense", "moe", "hybrid"):
-        y, kc, vc = _attention_decode(lp["attn"], h, cache_l["k"],
-                                      cache_l["v"], lengths, cfg)
-        new_cache["k"], new_cache["v"] = kc, vc
+        paged = "pages_k" in cache_l
+        kk, vv = ("pages_k", "pages_v") if paged else ("k", "v")
+        y, kc, vc = _attention_decode(
+            lp["attn"], h, cache_l[kk], cache_l[vv], lengths, cfg,
+            active=active, page_table=page_table if paged else None,
+            phi_pages=phi_pages if paged else None)
+        new_cache[kk], new_cache[vv] = kc, vc
     if cfg.family in ("ssm", "hybrid"):
         ys, hs, tx, tbc = _ssm_decode(lp["ssm"], h, cache_l["ssm_h"],
                                       cache_l["conv_x"], cache_l["conv_bc"],
                                       cfg)
+        if active is not None:       # freeze retired slots' SSM state too
+            hs = jnp.where(active[:, None, None, None], hs, cache_l["ssm_h"])
+            tx = jnp.where(active[:, None, None, None], tx, cache_l["conv_x"])
+            tbc = jnp.where(active[:, None, None], tbc, cache_l["conv_bc"])
         new_cache["ssm_h"], new_cache["conv_x"] = hs, tx
         new_cache["conv_bc"] = tbc
     if cfg.family in ("dense", "moe"):
@@ -637,16 +685,44 @@ def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None,
 
 
 def decode_step(params, cache, tokens, cfg: ArchConfig):
-    """One decode step. tokens: (B, 1) — appended at position cache.length."""
-    lengths = cache["length"] + 1                # position of the new token +1
+    """One decode step. tokens: (B, 1) — appended at position cache.length.
+
+    Rows with ``cache["length"] == 0`` are INACTIVE (a freed serve slot, or
+    a never-admitted lane) and are frozen: no KV/SSM write, no length
+    advance. Prefill always leaves length >= 1, so length-0 is an exact
+    idle marker — the serve engine zeroes a slot's length at retire and
+    this mask keeps the lane inert until the slot is reused.
+    """
+    active = cache["length"] > 0
+    lengths = cache["length"] + active.astype(jnp.int32)
     x = _embed_in(params, tokens, None, cfg)
 
-    layer_cache = {k: cache[k] for k in
-                   ("k", "v", "ssm_h", "conv_x", "conv_bc") if k in cache}
+    paged = "pages_k" in cache
+    page_table = cache.get("page_table")
+    leaf_keys = (("pages_k", "pages_v") if paged else ("k", "v")) \
+        + ("ssm_h", "conv_x", "conv_bc")
+    layer_cache = {k: cache[k] for k in leaf_keys if k in cache}
+
+    new_cache = dict(cache)
+    if paged and "pages_phi" in cache:
+        # the key factor row for the new position is layer-independent —
+        # write it once, outside the layer scan (frozen rows drop)
+        phi_pages = cache["pages_phi"]
+        n_pages, ps = phi_pages.shape[0], phi_pages.shape[1]
+        pos = lengths - 1
+        page = page_table[jnp.arange(pos.shape[0]), pos // ps]
+        page = jnp.where(active, page, n_pages)
+        row = jnp.stack([jnp.ones_like(pos, jnp.float32),
+                         pos.astype(jnp.float32)], axis=-1)
+        phi_pages = phi_pages.at[page, pos % ps].set(row, mode="drop")
+        new_cache["pages_phi"] = phi_pages
+    else:
+        phi_pages = None
 
     def body(x, inp):
         lp, cl = inp
-        x, ncl = _layer_decode(lp, cl, x, lengths, cfg)
+        x, ncl = _layer_decode(lp, cl, x, lengths, cfg, active=active,
+                               page_table=page_table, phi_pages=phi_pages)
         return x, ncl
 
     x, new_layer_cache = jax.lax.scan(body, x,
@@ -655,7 +731,6 @@ def decode_step(params, cache, tokens, cfg: ArchConfig):
                                       unroll=flags.scan_unroll(cfg.n_layers))
     hid = rmsnorm(x, params["final_norm"])
     logits = unembed_logits(hid, params["embed"].astype(hid.dtype))
-    new_cache = dict(cache)
     new_cache.update(new_layer_cache)
     new_cache["length"] = lengths
     return logits, new_cache
@@ -679,6 +754,90 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
         cache["conv_x"] = jnp.zeros((l, batch, w - 1, hs, p), dt)
         cache["conv_bc"] = jnp.zeros((l, batch, w - 1, 2 * n), dt)
     return cache
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
+                     page_size: int, pages_per_slot: Optional[int] = None
+                     ) -> dict:
+    """Paged cache pytree: a shared page pool + per-slot page tables.
+
+    Every full-KV cache leaf is paged — K, V, and the per-page ``phi_k``
+    factor slab (``pages_phi``, float32 so positions stay exact: the rank-2
+    ALiBi key factor ``[1, pos]`` rides with k at Theta(N R) storage,
+    FlashBias Thm 3.2 / Sec. 4.3). ``page_table`` maps each slot's logical
+    block j to its physical page; unmapped entries may hold anything — the
+    decode path clamps them and the length mask discards what they read.
+    Ring-KV (sliding window) and SSM state are constant-size per slot and
+    stay on the slot-contiguous discipline; SSM leaves of a hybrid arch
+    ride along unchanged.
+    """
+    assert cfg.family in ("dense", "moe", "hybrid"), cfg.family
+    dt = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    kvp, hd = cfg.kv_heads_padded, cfg.resolved_head_dim
+    pps = pages_per_slot or n_pages
+    cache = {
+        "length": jnp.zeros((batch,), jnp.int32),
+        "pages_k": jnp.zeros((l, n_pages, page_size, kvp, hd), dt),
+        "pages_v": jnp.zeros((l, n_pages, page_size, kvp, hd), dt),
+        "page_table": jnp.zeros((batch, pps), jnp.int32),
+    }
+    if cfg.bias_kind == "alibi":
+        cache["pages_phi"] = jnp.zeros((n_pages, page_size, 2), jnp.float32)
+    if cfg.family == "hybrid":
+        hs, p, n = cfg.ssm_heads_padded, cfg.ssm_head_dim, cfg.ssm_state
+        w = cfg.conv_width
+        cache["ssm_h"] = jnp.zeros((l, batch, hs, p, n), jnp.float32)
+        cache["conv_x"] = jnp.zeros((l, batch, w - 1, hs, p), dt)
+        cache["conv_bc"] = jnp.zeros((l, batch, w - 1, 2 * n), dt)
+    return cache
+
+
+def insert_paged_cache_at_slots(dst: dict, src: dict, slots, tables) -> dict:
+    """Scatter a prefilled wave into the paged cache, whole pages at a time.
+
+    ``src`` is a contiguous wave cache from ``prefill`` whose sequence
+    length S is a page multiple. ``tables`` (W, pages_per_slot) int32 holds
+    each wave row's full page-table row — the pages covering its prompt
+    first, then any pages reserved for decode growth; unused entries carry
+    an out-of-range id (>= n_pages) and the corresponding page writes are
+    DROPPED, exactly like out-of-range ``slots`` drop whole rows. Prompt
+    pages scatter K/V content and position factors into the pool; the page
+    table and per-slot ``length`` scatter at ``slots``; SSM leaves (hybrid)
+    ride the slot path of ``insert_cache_at_slots``.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    tables = jnp.asarray(tables, jnp.int32)
+    n_pages, ps = dst["pages_k"].shape[1], dst["pages_k"].shape[2]
+    w = tables.shape[0]
+    s = src["k"].shape[2]
+    assert s % ps == 0, (s, ps)
+    p_w = s // ps
+    if tables.shape[1] >= p_w:
+        content_ids = tables[:, :p_w]
+    else:
+        content_ids = jnp.pad(tables, ((0, 0), (0, p_w - tables.shape[1])),
+                              constant_values=n_pages)
+    flat_ids = content_ids.reshape(-1)                    # (W * P_w,)
+
+    out = dict(dst)
+    for key, pool_key in (("k", "pages_k"), ("v", "pages_v")):
+        kv = src[key]                                     # (L, W, S, KVH, hd)
+        l = kv.shape[0]
+        pages = kv.reshape(l, w * p_w, ps, *kv.shape[3:])
+        out[pool_key] = dst[pool_key].at[:, flat_ids].set(pages, mode="drop")
+    if "pages_phi" in dst:
+        pos = jnp.arange(s, dtype=jnp.float32)
+        rows = jnp.stack([jnp.ones_like(pos), pos], -1)   # (S, 2): [1, pos]
+        rows = jnp.broadcast_to(rows.reshape(1, p_w, ps, 2), (w, p_w, ps, 2))
+        out["pages_phi"] = dst["pages_phi"].at[flat_ids].set(
+            rows.reshape(w * p_w, ps, 2), mode="drop")
+    out["page_table"] = dst["page_table"].at[slots].set(tables, mode="drop")
+    out["length"] = dst["length"].at[slots].set(src["length"], mode="drop")
+    for key in ("ssm_h", "conv_x", "conv_bc"):
+        if key in dst:
+            out[key] = dst[key].at[:, slots].set(src[key], mode="drop")
+    return out
 
 
 def insert_cache_at_slots(dst: dict, src: dict, slots) -> dict:

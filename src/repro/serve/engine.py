@@ -22,8 +22,17 @@ prompt length is the one shape that changes with wave composition).
 Cache kinds (all pytrees, all jit-traceable):
 
 - full KV            (dense/moe archs)        — (L, B, S_max, KV, hd),
+- paged KV           (full-KV + ``page_size``) — shared (L, n_pages, ps,
+  KV, hd) pool + per-page phi_k factor slab + per-slot page tables,
 - ring KV            (sliding-window archs)   — (L, B, window, KV, hd),
 - SSM state + conv   (ssm/hybrid archs)       — constant size.
+
+Paged mode (pass ``page_size``) replaces the per-slot ``max_len`` segment
+with a vLLM-style shared page pool: admission is gated on free pages (the
+PR-2 ``prompt + budget <= max_len`` assert is gone), a request's pages are
+reserved whole at admit and freed the step it finishes, and retired slots
+are frozen via the length-0 active mask so a stale page table can never
+scribble on reallocated pages. See serve/README.md §Paged KV.
 """
 from __future__ import annotations
 
@@ -36,10 +45,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
+from repro.serve.pages import PagePool
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import FIFOScheduler, Request
 
 __all__ = ["ServeEngine"]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
 @dataclasses.dataclass
@@ -66,11 +80,26 @@ class ServeEngine:
             wave to its own maximum (fewest wasted FLOPs); pinning it makes
             request outputs independent of wave composition and bounds
             prefill compiles to one.
+        page_size: enables PAGED KV for full-KV families — the cache
+            becomes a shared pool of ``n_pages`` pages of ``page_size``
+            tokens (K, V, and the per-page phi_k factor slab), admission is
+            gated on free pages instead of the slot-segment bound, and a
+            request may exceed ``max_len`` as long as its pages fit. Ring-KV
+            and SSM-only families ignore it (their caches are already
+            constant-size per slot).
+        n_pages: pool size; defaults to ``n_slots * ceil(max_len /
+            page_size)`` — the same HBM the contiguous layout would commit.
+        pages_per_slot: page-table width = one request's max page count.
+            Defaults to ``n_pages`` (a lone request may take the whole
+            pool); lower it to bound the per-step logical view.
     """
 
     def __init__(self, model: Model, params: dict, max_len: int = 1024,
                  eos_id: int = -1, n_slots: int = 4,
-                 prefill_len: Optional[int] = None):
+                 prefill_len: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 pages_per_slot: Optional[int] = None):
         assert model.prefill is not None and model.decode is not None, \
             "model is not decode-capable"
         self.model, self.params = model, params
@@ -80,8 +109,19 @@ class ServeEngine:
         self._vocab = cfg.vocab
         self._front_dim = (cfg.frontend_len, cfg.d_model)
         # full-KV families must fit prompt + budget inside the slot segment
+        # (contiguous mode) or inside the page pool (paged mode)
         self._bounded_cache = (cfg.family in ("dense", "moe", "hybrid")
                                and not (cfg.window and cfg.window < max_len))
+        self._paged = (page_size is not None and self._bounded_cache
+                       and model.init_paged_cache is not None)
+        if self._paged:
+            self.page_size = page_size
+            self.n_pages = n_pages or n_slots * _ceil_to(max_len,
+                                                         page_size) // page_size
+            self.pages_per_slot = min(pages_per_slot or self.n_pages,
+                                      self.n_pages)
+            self._pool = PagePool(self.n_pages, page_size)
+            self._slot_pages: Dict[int, List[int]] = {}
         self.scheduler = FIFOScheduler()
         self._next_rid = 0
         self._results: Dict[int, List[int]] = {}
@@ -90,15 +130,17 @@ class ServeEngine:
         self._free: List[int] = list(range(n_slots))
         self._cache = None                        # allocated on first step
 
-        def _pf(p, toks, front, lengths):
+        def _pf(p, toks, front, lengths, max_len):
             batch = {"tokens": toks}
             if front is not None:
                 batch["frontend"] = front
             return model.prefill(p, batch, max_len=max_len, lengths=lengths)
 
-        self._prefill = jax.jit(_pf)
+        self._prefill = jax.jit(_pf, static_argnames=("max_len",))
         self._decode = jax.jit(model.decode)
         self._insert = jax.jit(model.insert_cache)
+        if self._paged:
+            self._insert_paged = jax.jit(model.insert_paged)
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -115,7 +157,16 @@ class ServeEngine:
         if self.prefill_len is not None:
             assert req.tokens.size <= self.prefill_len, \
                 (req.tokens.size, self.prefill_len)
-        if self._bounded_cache:
+        if self._bounded_cache and self._paged:
+            # paged: the only hard bound is the request's own page-table
+            # row — prompt + budget may exceed max_len (the PR-2 segment
+            # bound is gone); admission waits for free pages instead
+            needed = self._pages_needed(req)
+            assert needed <= self.pages_per_slot, \
+                f"request needs {needed} pages " \
+                f"(prompt {req.prompt_len} + budget {max_new_tokens}), " \
+                f"page table holds {self.pages_per_slot}"
+        elif self._bounded_cache:
             assert req.prompt_len + max_new_tokens <= self.max_len, \
                 f"prompt {req.prompt_len} + budget {max_new_tokens} " \
                 f"exceeds slot segment {self.max_len}"
@@ -158,11 +209,36 @@ class ServeEngine:
         while self._live or len(self.scheduler):
             self.step()
 
+    def _pages_needed(self, req: Request) -> int:
+        """Pages a request can ever touch: its final cache length is
+        ``prompt + budget - 1`` (the last sampled token is never fed back)."""
+        return self._pool.pages_needed(req.prompt_len + req.max_new_tokens - 1)
+
+    def _take_wave(self) -> List[Request]:
+        """Pop the next admission wave. Contiguous mode: one request per
+        free slot. Paged mode: additionally gated on free-page accounting —
+        admit while the head request's full reservation (prompt pages +
+        decode-growth pages) fits; strict FIFO, no head-of-line bypass."""
+        if not self._paged:
+            return self.scheduler.take(len(self._free))
+        wave: List[Request] = []
+        reserved = 0
+        while len(wave) < len(self._free):
+            r = self.scheduler.peek()
+            if r is None:
+                break
+            needed = self._pages_needed(r)
+            if needed > self._pool.n_free - reserved:
+                break                    # backpressure: wait for retires
+            reserved += needed
+            wave.append(self.scheduler.take(1)[0])
+        return wave
+
     def admit(self) -> List[int]:
         """Prefill the next admission wave into freed slots and emit each
         admitted request's first token (from its prefill logits)."""
         self._ensure_state()
-        wave = self.scheduler.take(len(self._free))
+        wave = self._take_wave()
         if not wave:
             return []
         slots = [self._free.pop(0) for _ in wave]
@@ -186,11 +262,31 @@ class ServeEngine:
                 front[i] = r.frontend
             front = jnp.asarray(front)
 
+        front_len = self._front_dim[0] if front is not None else 0
+        if self._paged:
+            # the wave cache only needs to hold the padded prompt, page-
+            # aligned — NOT a full max_len segment; pages scatter from it
+            pf_len = _ceil_to(pl + front_len, self.page_size)
+        else:
+            pf_len = self.max_len
         logits, wave_cache = self._prefill(
-            self.params, jnp.asarray(toks), front, jnp.asarray(lengths))
+            self.params, jnp.asarray(toks), front, jnp.asarray(lengths),
+            pf_len)
         slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
         slot_ids[:w] = slots
-        self._cache = self._insert(self._cache, wave_cache, slot_ids)
+        if self._paged:
+            # allocate each request's full reservation now; decode appends
+            # through the table without ever allocating mid-flight
+            tables = np.full((ns, self.pages_per_slot), self.n_pages,
+                             np.int32)
+            for i, (slot, r) in enumerate(zip(slots, wave)):
+                pages = self._pool.alloc(self._pages_needed(r))
+                self._slot_pages[slot] = pages
+                tables[i, :len(pages)] = pages
+            self._cache = self._insert_paged(self._cache, wave_cache,
+                                             slot_ids, jnp.asarray(tables))
+        else:
+            self._cache = self._insert(self._cache, wave_cache, slot_ids)
 
         # per-slot sampling state + per-request PRNG chains
         sl = jnp.asarray(np.asarray(slots, np.int32))
@@ -247,11 +343,25 @@ class ServeEngine:
         if self._cache is not None:
             return
         ns = self.n_slots
-        self._cache = self.model.init_cache(ns, self.max_len)
+        if self._paged:
+            self._cache = self.model.init_paged_cache(
+                ns, self.n_pages, self.page_size, self.pages_per_slot)
+        else:
+            self._cache = self.model.init_cache(ns, self.max_len)
         self._temps = jnp.zeros((ns,), jnp.float32)
         self._topks = jnp.zeros((ns,), jnp.int32)
         self._keys = jnp.zeros((ns, 2), jnp.uint32)
         self._last_tok = jnp.zeros((ns, 1), jnp.int32)
+
+    def _retire_slot(self, slot: int) -> None:
+        """Free a finished slot: zero its cache length so ``decode_step``'s
+        active mask freezes the lane (ISSUE 3: retired slots used to keep
+        advancing their length and writing garbage KV every step — fatal
+        under paging, where the stale page table points at pages that may
+        already belong to another request), and return its pages."""
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        if self._paged:
+            self._pool.free(self._slot_pages.pop(slot))
 
     def _sample_and_commit(self, logits2d, mask: np.ndarray) -> List[int]:
         """Sample all slots, commit key/token state for ``mask`` slots only
@@ -275,4 +385,5 @@ class ServeEngine:
                 finished.append(st.req.rid)
                 del self._live[slot]
                 bisect.insort(self._free, slot)
+                self._retire_slot(slot)
         return finished

@@ -1,0 +1,73 @@
+"""Shared KV page pool for the serve engine (vLLM-style paged cache).
+
+The device cache owns ``n_pages`` pages of ``page_size`` token positions for
+every paged cache leaf — K, V, *and the per-page ``phi_k`` factor slab* that
+FlashBias Sec. 4.3 makes the KV cache the natural home of (the rank-R key
+factors "ride with k", keeping bias storage at Theta(N R), Thm 3.2). This
+module is the HOST side: a free-list allocator plus per-request accounting.
+The device side (pool arrays + page tables) lives in ``models/lm.py`` and
+the paged flash-decode path in ``kernels/``.
+
+Allocation is whole-request: admission reserves every page a request can
+ever touch (``pages_needed(prompt + budget - 1)``), so decode never
+allocates mid-flight and can never deadlock; retire frees the pages
+immediately (early EOS returns the unused tail too). Pages are uniform, so
+"fragmentation" reduces to free-list reuse — freed pages are handed out
+lowest-index-first for deterministic page tables.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, List
+
+__all__ = ["PagePool"]
+
+
+class PagePool:
+    """Host-side allocator over ``n_pages`` pages of ``page_size`` tokens."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages >= 1 and page_size >= 1, (n_pages, page_size)
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages))   # heap, lowest first
+        heapq.heapify(self._free)
+        self._allocated = [False] * n_pages
+
+    # ------------------------------------------------------------------
+    # Accounting
+    # ------------------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        """Pages covering positions ``0 .. n_tokens-1`` (>= 1)."""
+        return max(1, -(-int(n_tokens) // self.page_size))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_free
+
+    # ------------------------------------------------------------------
+    # Alloc / free
+    # ------------------------------------------------------------------
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` pages (lowest free indices). Raises MemoryError when
+        the pool can't cover the request — callers gate on ``can_alloc``."""
+        if n > self.n_free:
+            raise MemoryError(f"PagePool: want {n} pages, {self.n_free} free")
+        pages = [heapq.heappop(self._free) for _ in range(n)]
+        for p in pages:
+            assert not self._allocated[p], f"double allocation of page {p}"
+            self._allocated[p] = True
+        return pages
+
+    def free(self, pages: Iterable[int]) -> None:
+        """Return pages to the pool. Double-free is an error."""
+        for p in pages:
+            assert 0 <= p < self.n_pages, p
+            assert self._allocated[p], f"double free of page {p}"
+            self._allocated[p] = False
+            heapq.heappush(self._free, p)

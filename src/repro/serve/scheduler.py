@@ -54,6 +54,11 @@ class FIFOScheduler:
     def add(self, req: Request) -> None:
         self._queue.append(req)
 
+    def peek(self) -> Optional[Request]:
+        """Head of the queue without popping (None when empty) — lets the
+        engine gate admission on resources (free pages) without reordering."""
+        return self._queue[0] if self._queue else None
+
     def take(self, n: int) -> List[Request]:
         """Pop up to ``n`` requests in arrival order."""
         wave = []

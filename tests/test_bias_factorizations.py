@@ -93,6 +93,29 @@ class TestLowRankTooling:
         es = [retained_energy(m, r) for r in (1, 4, 8, 24)]
         assert es == sorted(es) and abs(es[-1] - 1.0) < 1e-5
 
+    def test_rank_for_energy_zero_matrix_clamps_to_spectrum(self):
+        """Regression (ISSUE 3): an all-zero matrix has a zero energy
+        profile (every entry < energy), which used to yield min(N,M)+1 —
+        a rank larger than any factorization of the matrix can have."""
+        z = jnp.zeros((12, 7))
+        assert rank_for_energy(z, 0.99) == 7
+        assert rank_for_energy(jnp.zeros((3, 3)), 1.0) == 3
+        # batched: a zero slice must not inflate past the spectrum either
+        batched = jnp.stack([jnp.zeros((8, 8)),
+                             jax.random.normal(jax.random.PRNGKey(3), (8, 8))])
+        assert rank_for_energy(batched, 0.99) <= 8
+
+    def test_retained_energy_rank_zero_and_overlong(self):
+        """Regression (ISSUE 3): rank 0 used to index profile[-1] and
+        report FULL energy for an empty factorization."""
+        m = jax.random.normal(jax.random.PRNGKey(4), (6, 6))
+        assert retained_energy(m, 0) == 0.0
+        assert retained_energy(m, -1) == 0.0
+        # ranks past the spectrum saturate at full energy, monotonically
+        assert abs(retained_energy(m, 100) - 1.0) < 1e-5
+        # zero matrix: profile is all zeros at every rank
+        assert retained_energy(jnp.zeros((5, 9)), 3) == 0.0
+
     def test_io_model_example_3_9(self):
         """Example 3.9: C=R=64, S=100KB(half prec) -> ~6x fewer HBM accesses."""
         io = IOModel(n=65536, m=65536, c=64, rank=64, sram=100 * 1024 // 2)

@@ -126,3 +126,87 @@ class TestGQAPhiKRegressions:
         want = ref.decode_reference(q_dec, k, v, lengths, phi_q=pq_dec,
                                     phi_k=jnp.repeat(pk, G, axis=2))
         np.testing.assert_allclose(out, want, atol=3e-5)
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+    def test_decode_per_q_head_phi_k(self, impl):
+        """Regression (ISSUE 3): per-Q-HEAD key factors (B, S, H, R) with
+        DISTINCT rows inside each GQA group. The Pallas path's grouped-key
+        layout carries one key factor per kv head and used to silently take
+        each group's first head — it must route this shape to the XLA path
+        instead (and the XLA path must expand nothing: the factors are
+        already per head)."""
+        q, k, v, pq, _, _ = _setup(key=5)
+        # per-q-head factors, guaranteed distinct within every group
+        pk_h = jax.random.normal(jax.random.PRNGKey(55), (B, S, H, R))
+        lengths = jnp.asarray(LENGTHS)
+        bidx = jnp.arange(B)
+        q_dec = q[bidx, LENGTHS - 1][:, None]
+        pq_dec = pq[bidx, LENGTHS - 1][:, None]
+        out = ops.flash_decode(q_dec, k, v, lengths, phi_q=pq_dec,
+                               phi_k=pk_h, impl=impl, block_k=16)
+        want = ref.decode_reference(q_dec, k, v, lengths, phi_q=pq_dec,
+                                    phi_k=pk_h)
+        np.testing.assert_allclose(out, want, atol=3e-5)
+        # the group-first-head collapse must produce DIFFERENT values here,
+        # otherwise this regression would pass vacuously
+        pk_head0 = jnp.repeat(pk_h.reshape(B, S, KVH, G, R)[:, :, :, 0],
+                              G, axis=2)
+        wrong = ref.decode_reference(q_dec, k, v, lengths, phi_q=pq_dec,
+                                     phi_k=pk_head0)
+        assert float(jnp.abs(want - wrong).max()) > 1e-2
+
+
+class TestPagedDecodeParity:
+    """The paged path (page pool + page table + per-page factor slab) must
+    agree with the contiguous path for every bias mode, on both impls, with
+    physically scrambled pages."""
+
+    PS = 16                                       # page_size == block_k
+
+    def _paginate(self, k, v, n_extra=5, seed=0):
+        p = S // self.PS
+        n_pages = B * p + n_extra
+        rng = np.random.RandomState(seed)
+        perm = rng.permutation(n_pages)[:B * p].reshape(B, p)
+        kp = np.array(jax.random.normal(jax.random.PRNGKey(90 + seed),
+                                        (n_pages, self.PS, KVH, D)))
+        vp = np.array(jax.random.normal(jax.random.PRNGKey(91 + seed),
+                                        (n_pages, self.PS, KVH, D)))
+        slab = np.zeros((n_pages, self.PS, 2), np.float32)
+        pos = np.arange(S, dtype=np.float32)
+        slab_log = np.stack([np.ones(S, np.float32), pos], -1)
+        for b in range(B):
+            for j in range(p):
+                kp[perm[b, j]] = np.asarray(k[b, j * self.PS:(j + 1) * self.PS])
+                vp[perm[b, j]] = np.asarray(v[b, j * self.PS:(j + 1) * self.PS])
+                slab[perm[b, j]] = slab_log[j * self.PS:(j + 1) * self.PS]
+        return (jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(slab),
+                jnp.asarray(perm, jnp.int32))
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+    @pytest.mark.parametrize("mode", ["none", "phi", "alibi"])
+    def test_paged_matches_contiguous(self, impl, mode):
+        q, k, v, pq, pk, slopes = _setup(key=6)
+        lengths = jnp.asarray(LENGTHS)
+        bidx = jnp.arange(B)
+        q_dec = q[bidx, LENGTHS - 1][:, None]
+        kp, vp, slab, pt = self._paginate(k, v)
+        kw_c = _bias_kwargs(mode, pq, pk, slopes)
+        kw_p = dict(kw_c)
+        if mode == "phi":
+            # paged mode reads key factors from the per-page slab (here the
+            # rank-2 ALiBi position factor [1, pos]); q factors are per head
+            # and must match the slab's rank
+            pq2 = jax.random.normal(jax.random.PRNGKey(66), (B, 1, H, 2))
+            kw_c = {"phi_q": pq2,
+                    "phi_k": jnp.broadcast_to(
+                        jnp.stack([jnp.ones(S), jnp.arange(S, dtype=jnp.float32)],
+                                  -1)[None, :, None, :], (B, S, 1, 2))}
+            kw_p = {"phi_q": pq2, "phi_k": slab}
+        want = ops.flash_decode(q_dec, k, v, lengths, impl="xla", block_k=16,
+                                **kw_c)
+        got = ops.flash_decode(q_dec, kp, vp, lengths, page_table=pt,
+                               impl=impl, block_k=16, **kw_p)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), atol=3e-5,
+                                   err_msg=f"paged {impl}/{mode}")
