@@ -5,6 +5,12 @@ Reported as the paper does: Delta = path_time - pure_causal_time, train and
 inference, on a reduced GPT-2-family model (CPU-relative; see common.py).
 FlashBias's exact decomposition makes its outputs bit-comparable to the
 dense-ALiBi baseline — asserted here, not just timed.
+
+    PYTHONPATH=src python -m benchmarks.bench_alibi [--smoke] [--out PATH]
+
+``--smoke`` shrinks the workload for CI (which runs this every push so the
+bench can't rot); ``--out`` writes the rows as ``BENCH_alibi.json``,
+uploaded with the BENCH artifact.
 """
 from __future__ import annotations
 
@@ -12,13 +18,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, rows_main, time_fn
 from repro.configs import smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
 
+DEFAULT_OUT = "BENCH_alibi.json"
 
-def run(seq=256, batch=2):
+
+def run(seq=256, batch=2, smoke=False):
+    if smoke:
+        seq, batch = 96, 1
     cfg_fb = smoke_config("gpt2_alibi_15b").replace(
         n_layers=4, d_model=128, n_heads=8, n_kv_heads=8, d_ff=256,
         head_dim=16)
@@ -65,6 +75,9 @@ def run(seq=256, batch=2):
     return rows
 
 
+def main(argv=None):
+    rows_main(lambda smoke: run(smoke=smoke), DEFAULT_OUT, argv)
+
+
 if __name__ == "__main__":
-    from benchmarks.common import print_rows
-    print_rows(run())
+    main()

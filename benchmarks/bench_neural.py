@@ -5,6 +5,12 @@ spherical biases): the NEURAL decomposition.
   report fit loss, dense-vs-FlashBias inference time, output drift.
 - App. G: token-wise factor MLPs approximate gravity ``1/(d^2+eps)`` and
   spherical (haversine) distance biases; report reconstruction error.
+
+    PYTHONPATH=src python -m benchmarks.bench_neural [--smoke] [--out PATH]
+
+``--smoke`` shrinks the fit iteration counts for CI (which runs this every
+push so the bench can't rot); ``--out`` writes the rows as
+``BENCH_neural.json``, uploaded with the BENCH artifact.
 """
 from __future__ import annotations
 
@@ -12,14 +18,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, rows_main, time_fn
 from repro.configs import smoke_config
 from repro.core import decomp
 from repro.models import get_model, pairformer as pf_mod
 from repro.models.common import init_params, stack_layers
 
+DEFAULT_OUT = "BENCH_neural.json"
 
-def _pairformer_rows():
+
+def _pairformer_rows(smoke=False):
+    steps = 30 if smoke else 120
     cfg = smoke_config("pairformer_lite").replace(n_layers=4)
     model = get_model(cfg)
     params = init_params(model.template(), jax.random.PRNGKey(0))
@@ -28,9 +37,9 @@ def _pairformer_rows():
     fp0 = init_params(stack_layers(pf_mod.factor_mlp_template(cfg, hidden=48),
                                    cfg.n_layers), jax.random.PRNGKey(2))
     fp, losses = pf_mod.fit_factor_mlps(jax.random.PRNGKey(3), params, fp0,
-                                        feats, cfg, steps=120, lr=3e-3)
+                                        feats, cfg, steps=steps, lr=3e-3)
     rows = [Row("table6_fit_eq5", 0.0,
-                f"loss {losses[0]:.4f}->{losses[-1]:.4f} (120 iters)")]
+                f"loss {losses[0]:.4f}->{losses[-1]:.4f} ({steps} iters)")]
 
     dense_fn = jax.jit(lambda p, x: pf_mod.forward(
         p, x, cfg.replace(bias_mode="dense")))
@@ -47,7 +56,8 @@ def _pairformer_rows():
     return rows
 
 
-def _appg_rows():
+def _appg_rows(smoke=False):
+    steps = 60 if smoke else 250
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -72,7 +82,7 @@ def _appg_rows():
             return xq, xq, fn(xq, xq)[None]
 
         fitted, losses = decomp.fit_neural_decomposition(
-            key, params, sample, steps=250, lr=3e-3)
+            key, params, sample, steps=steps, lr=3e-3)
         xq, xk, target = sample(jax.random.PRNGKey(9))
         pred = decomp.predicted_bias(fitted, xq, xk)[0]
         rel = float(jnp.linalg.norm(pred - target[0])
@@ -83,10 +93,13 @@ def _appg_rows():
     return rows
 
 
-def run():
-    return _pairformer_rows() + _appg_rows()
+def run(smoke=False):
+    return _pairformer_rows(smoke) + _appg_rows(smoke)
+
+
+def main(argv=None):
+    rows_main(lambda smoke: run(smoke=smoke), DEFAULT_OUT, argv)
 
 
 if __name__ == "__main__":
-    from benchmarks.common import print_rows
-    print_rows(run())
+    main()

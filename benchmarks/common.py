@@ -12,7 +12,7 @@ from typing import Callable
 
 import jax
 
-__all__ = ["time_fn", "Row", "print_rows"]
+__all__ = ["time_fn", "Row", "print_rows", "rows_main"]
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -40,3 +40,24 @@ def print_rows(rows):
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())
+
+
+def rows_main(run_fn, default_out: str, argv=None) -> None:
+    """Shared ``--smoke`` / ``--out`` CLI for row-emitting benchmarks:
+    ``run_fn(smoke=...)`` produces Rows, written as JSON (uploaded with
+    the CI BENCH artifact) and printed as CSV."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--out", default=default_out)
+    args = ap.parse_args(argv)
+    rows = run_fn(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump({"rows": [{"name": r.name, "us_per_call": r.us,
+                             "derived": r.derived} for r in rows]}, f,
+                  indent=2)
+    print_rows(rows)
+    print(f"# wrote {args.out}")

@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""CI benchmark-regression gate over the BENCH_*.json smoke artifacts.
+
+CI has always *uploaded* BENCH_kernels.json / BENCH_serve.json but never
+checked them, so a perf regression in the paper's headline A/B (dense-bias
+vs FlashBias factored-bias attention) or in serve decode throughput would
+merge silently. This script fails the job when a gated metric drops more
+than ``--tolerance`` (default 30%) below its committed baseline:
+
+1. kernels: ``dense_vs_factored.speedup`` from BENCH_kernels.json — a
+   dimensionless ratio of two jitted paths timed on the same machine, so
+   it transfers across runner hardware far better than absolute timings
+   (still within ~±20%: commit the low end of observed values).
+2. serve: contiguous decode tokens/s at the highest measured occupancy
+   from BENCH_serve.json ``points``. This is an absolute number: after a
+   runner-hardware change, refresh the committed value (see below).
+3. serve: ``lazy_vs_whole.ratio`` — lazy page growth must sustain
+   whole-request-reservation decode throughput at occupancy 4. The two
+   engines are timed interleaved (same load profile), so this ratio is
+   noise-robust and needs no baseline.
+
+Baselines live in ``benchmarks/baselines/*.baseline.json``. Refresh them
+from the current BENCH files with::
+
+    python scripts/check_bench.py --update-baseline
+
+Run the smoke benchmarks first, on a quiet machine (or the CI runner class
+the gate will run on), and eyeball the diff before committing: a baseline
+captured during a load burst weakens the gate; one captured on faster
+hardware than CI will flake it. The committed serve baseline is
+deliberately conservative (low end of observed) — the gate exists to catch
+integer-factor regressions (e.g. a factored path silently materializing
+the dense bias), not 10% drift on shared runners.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE_DIR = os.path.join("benchmarks", "baselines")
+KERNELS_BASELINE = "BENCH_kernels.baseline.json"
+SERVE_BASELINE = "BENCH_serve.baseline.json"
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def kernels_speedup(bench: dict) -> float:
+    """Factored-vs-dense speedup of the same attention workload."""
+    return float(bench["dense_vs_factored"]["speedup"])
+
+
+def serve_decode_point(bench: dict) -> tuple[int, float]:
+    """(occupancy, decode tokens/s) of the highest-occupancy point."""
+    point = max(bench["points"], key=lambda p: p["occupancy"])
+    return int(point["occupancy"]), float(point["decode_tokens_per_s"])
+
+
+def lazy_vs_whole_ratio(bench: dict) -> float:
+    """Interleaved lazy/whole decode throughput ratio (ISSUE 4)."""
+    return float(bench["lazy_vs_whole"]["ratio"])
+
+
+def check(
+    name: str,
+    current: float,
+    floor: float,
+    detail: str,
+    failures: list,
+) -> None:
+    status = "ok" if current >= floor else "FAIL"
+    print(f"[{status}] {name}: {current:.3f} (floor {floor:.3f}; {detail})")
+    if current < floor:
+        failures.append(name)
+
+
+def update_baselines(kernels: dict, serve: dict, baseline_dir: str) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    occ, tps = serve_decode_point(serve)
+    payloads = {
+        KERNELS_BASELINE: {"speedup": kernels_speedup(kernels)},
+        SERVE_BASELINE: {"occupancy": occ, "decode_tokens_per_s": tps},
+    }
+    for fname, payload in payloads.items():
+        path = os.path.join(baseline_dir, fname)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {path}: {payload}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--kernels", default="BENCH_kernels.json")
+    ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.30,
+        help="allowed fractional drop below baseline (default 0.30)",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the committed baselines from the current BENCH files",
+    )
+    args = ap.parse_args(argv)
+
+    kernels = _load(args.kernels)
+    serve = _load(args.serve)
+    if args.update_baseline:
+        update_baselines(kernels, serve, args.baseline_dir)
+        return 0
+
+    kb = _load(os.path.join(args.baseline_dir, KERNELS_BASELINE))
+    sb = _load(os.path.join(args.baseline_dir, SERVE_BASELINE))
+    band = 1.0 - args.tolerance
+    failures: list = []
+
+    check(
+        "kernels dense-vs-factored speedup",
+        kernels_speedup(kernels),
+        band * float(kb["speedup"]),
+        f"baseline {float(kb['speedup']):.3f}, tol {args.tolerance:.0%}",
+        failures,
+    )
+    occ, tps = serve_decode_point(serve)
+    if occ != int(sb["occupancy"]):
+        print(
+            f"[FAIL] serve occupancy mismatch: bench measured occupancy "
+            f"{occ}, baseline holds occupancy {sb['occupancy']} — not "
+            "comparable; re-run --update-baseline after changing the "
+            "bench occupancies",
+            file=sys.stderr,
+        )
+        failures.append("serve occupancy mismatch")
+    check(
+        f"serve decode tok/s @ occupancy {occ}",
+        tps,
+        band * float(sb["decode_tokens_per_s"]),
+        f"baseline {float(sb['decode_tokens_per_s']):.1f} @ occupancy "
+        f"{sb['occupancy']}, tol {args.tolerance:.0%}",
+        failures,
+    )
+    check(
+        "serve lazy-vs-whole decode ratio",
+        lazy_vs_whole_ratio(serve),
+        band,
+        f"interleaved A/B, no baseline, tol {args.tolerance:.0%}",
+        failures,
+    )
+
+    if failures:
+        print(f"benchmark regression gate FAILED: {failures}", file=sys.stderr)
+        print(
+            "If this is expected (new runner hardware, intentional trade), "
+            "refresh with: python scripts/check_bench.py --update-baseline",
+            file=sys.stderr,
+        )
+        return 1
+    print("benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,7 +34,17 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=0,
                     help="> 0: paged KV — shared page pool + page tables "
                          "instead of per-slot max_len segments")
+    ap.add_argument("--page-reservation", choices=("lazy", "whole"),
+                    default="lazy",
+                    help="lazy: reserve prompt pages, grow on demand, "
+                         "preempt on pool exhaustion; whole: reserve the "
+                         "full footprint at admit (PR-3)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="> 0: override the page-pool size (undersize it "
+                         "to watch lazy growth preempt under pressure)")
     args = ap.parse_args(argv)
+    if args.pool_pages and not args.page_size:
+        ap.error("--pool-pages requires --page-size (paged KV)")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
@@ -46,7 +56,10 @@ def main(argv=None):
         # table at the per-slot segment footprint — the paged logical view
         # (and the XLA gather) stays the size of one contiguous segment
         kw = dict(page_size=args.page_size,
-                  pages_per_slot=-(-max_len // args.page_size))
+                  pages_per_slot=-(-max_len // args.page_size),
+                  page_reservation=args.page_reservation)
+        if args.pool_pages:
+            kw["n_pages"] = args.pool_pages
     engine = ServeEngine(model, params, max_len=max_len,
                          n_slots=args.slots, prefill_len=args.prompt_len,
                          **kw)
@@ -77,6 +90,11 @@ def main(argv=None):
     print(f"[serve] {cfg.name}: {args.requests} ragged requests "
           f"(prompts {lens.min()}-{lens.max()}) over {args.slots} slots: "
           f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    stats = engine.page_stats()
+    if stats:
+        print(f"[serve] pages: {stats['watermark']}/{stats['n_pages']} peak "
+              f"({args.page_reservation}), {stats['grown']} grown "
+              f"mid-flight, {stats['preemptions']} preemptions")
     print("first request:", engine.result(rids[0])[:16])
     return [engine.result(r) for r in rids]
 

@@ -17,6 +17,9 @@
 - ``insert_paged(dst, src, slots, tables)`` — scatter a prefilled wave into
   the paged cache whole pages at a time (``tables`` carries each row's
   page-table row; out-of-range page/slot ids are dropped),
+- ``grow_page_table(dst, slots, tables)`` — rewrite page-table rows for
+  slots that grew a page mid-flight (lazy growth); existing page CONTENT
+  is not re-scattered, only the int32 rows move,
 - ``input_specs(shape)``             — ShapeDtypeStruct stand-ins for every
   model input of an assigned (shape) cell: weak-type-correct, shardable,
   never allocated. This is what the multi-pod dry-run lowers against.
@@ -46,6 +49,7 @@ class Model:
     insert_cache: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
     insert_paged: Optional[Callable] = None
+    grow_page_table: Optional[Callable] = None
     input_specs: Optional[Callable] = None
 
 
@@ -94,6 +98,9 @@ def _lm_model(cfg: ArchConfig) -> Model:
             if cfg.family in ("dense", "moe", "hybrid") else None),
         insert_paged=(lm.insert_paged_cache_at_slots
                       if cfg.family in ("dense", "moe", "hybrid") else None),
+        grow_page_table=(lm.grow_page_tables_at_slots
+                         if cfg.family in ("dense", "moe", "hybrid")
+                         else None),
         input_specs=input_specs,
     )
 

@@ -35,7 +35,8 @@ from repro.models.common import (PDef, cross_entropy_loss, embed_lookup,
 
 __all__ = ["lm_template", "loss_fn", "prefill", "decode_step", "init_cache",
            "init_paged_cache", "insert_cache_at_slots",
-           "insert_paged_cache_at_slots", "forward_hidden"]
+           "insert_paged_cache_at_slots", "grow_page_tables_at_slots",
+           "forward_hidden"]
 
 
 # ---------------------------------------------------------------------------
@@ -837,6 +838,25 @@ def insert_paged_cache_at_slots(dst: dict, src: dict, slots, tables) -> dict:
     for key in ("ssm_h", "conv_x", "conv_bc"):
         if key in dst:
             out[key] = dst[key].at[:, slots].set(src[key], mode="drop")
+    return out
+
+
+def grow_page_tables_at_slots(dst: dict, slots, tables) -> dict:
+    """Rewrite the page-table rows of slots that grew a page mid-flight.
+
+    Lazy page growth (ISSUE 4) appends physical pages to a live request as
+    its length crosses page boundaries. Only the int32 table rows move —
+    the pages already holding K/V content and ``phi_k`` factor rows are
+    NOT re-scattered (``insert_paged_cache_at_slots`` moves content; this
+    is its growth-only complement). ``tables`` (W, pages_per_slot) carries
+    each growing slot's FULL new row (existing pages + the appended ones,
+    then out-of-range sentinels); rows whose ``slots`` entry is out of
+    range (>= n_slots) are dropped, so a fixed-width growth batch compiles
+    once per engine."""
+    slots = jnp.asarray(slots, jnp.int32)
+    tables = jnp.asarray(tables, jnp.int32)
+    out = dict(dst)
+    out["page_table"] = dst["page_table"].at[slots].set(tables, mode="drop")
     return out
 
 

@@ -28,11 +28,18 @@ Cache kinds (all pytrees, all jit-traceable):
 - SSM state + conv   (ssm/hybrid archs)       — constant size.
 
 Paged mode (pass ``page_size``) replaces the per-slot ``max_len`` segment
-with a vLLM-style shared page pool: admission is gated on free pages (the
-PR-2 ``prompt + budget <= max_len`` assert is gone), a request's pages are
-reserved whole at admit and freed the step it finishes, and retired slots
-are frozen via the length-0 active mask so a stale page table can never
-scribble on reallocated pages. See serve/README.md §Paged KV.
+with a vLLM-style shared page pool. Since ISSUE 4 page reservation is LAZY
+by default: admission reserves only the pages covering a request's prompt,
+and ``decode`` grows a slot by one page when its length crosses a page
+boundary. When the pool runs dry mid-flight the engine PREEMPTS the
+lowest-priority in-flight request (latest arrival): its generated tokens
+are snapshotted into its prompt, its PRNG key chain is snapshotted, its
+pages free immediately, and it re-enters at the head of the queue for
+re-prefill — greedy outputs are bit-identical to the never-preempted run.
+``page_reservation="whole"`` restores the PR-3 whole-request reservation
+(decode never allocates, nothing is ever preempted for pages). Retired
+slots are frozen via the length-0 active mask so a stale page table can
+never scribble on reallocated pages. See serve/README.md §Paged KV.
 """
 from __future__ import annotations
 
@@ -58,9 +65,14 @@ def _ceil_to(x: int, m: int) -> int:
 
 @dataclasses.dataclass
 class _Slot:
-    """Host-side state of one occupied decode lane."""
+    """Host-side state of one occupied decode lane.
+
+    ``length`` mirrors ``cache["length"][slot]``: it is the position the
+    NEXT decode step will write, which is what lazy page growth gates on
+    (no device read-back in the decode loop)."""
     req: Request
     generated: int = 0
+    length: int = 0
 
 
 class ServeEngine:
@@ -71,7 +83,7 @@ class ServeEngine:
             insert_cache).
         params: parameter pytree.
         max_len: per-slot cache segment length (prompt + decode budget must
-            fit for full-KV families).
+            fit for full-KV families in contiguous mode).
         eos_id: generation stops when this id is sampled (it is kept in the
             output; remaining columns of ``generate`` pad with it). -1
             never matches, i.e. requests always run out their budget.
@@ -79,7 +91,9 @@ class ServeEngine:
         prefill_len: pinned padded prompt length. None pads each admission
             wave to its own maximum (fewest wasted FLOPs); pinning it makes
             request outputs independent of wave composition and bounds
-            prefill compiles to one.
+            prefill compiles to one. A preempted request's resumed prompt
+            (original prompt + generated-so-far) may exceed it; such waves
+            pad to the resumed length instead.
         page_size: enables PAGED KV for full-KV families — the cache
             becomes a shared pool of ``n_pages`` pages of ``page_size``
             tokens (K, V, and the per-page phi_k factor slab), admission is
@@ -92,6 +106,13 @@ class ServeEngine:
         pages_per_slot: page-table width = one request's max page count.
             Defaults to ``n_pages`` (a lone request may take the whole
             pool); lower it to bound the per-step logical view.
+        page_reservation: ``"lazy"`` (default) reserves only the prompt's
+            pages at admit and grows on demand, preempting when the pool
+            runs dry; ``"whole"`` reserves a request's full worst-case
+            footprint at admit (PR-3 behaviour — decode never allocates).
+        scheduler_policy: ``"fifo"`` (default) admits in arrival order;
+            ``"spf"`` admits the shortest queued prompt first. Preempted
+            requests resume ahead of arrivals under either policy.
     """
 
     def __init__(self, model: Model, params: dict, max_len: int = 1024,
@@ -99,9 +120,12 @@ class ServeEngine:
                  prefill_len: Optional[int] = None,
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
-                 pages_per_slot: Optional[int] = None):
+                 pages_per_slot: Optional[int] = None,
+                 page_reservation: str = "lazy",
+                 scheduler_policy: str = "fifo"):
         assert model.prefill is not None and model.decode is not None, \
             "model is not decode-capable"
+        assert page_reservation in ("lazy", "whole"), page_reservation
         self.model, self.params = model, params
         self.max_len, self.eos_id = max_len, eos_id
         self.n_slots, self.prefill_len = n_slots, prefill_len
@@ -114,6 +138,8 @@ class ServeEngine:
                                and not (cfg.window and cfg.window < max_len))
         self._paged = (page_size is not None and self._bounded_cache
                        and model.init_paged_cache is not None)
+        self._lazy = self._paged and page_reservation == "lazy"
+        self.n_preemptions = 0
         if self._paged:
             self.page_size = page_size
             self.n_pages = n_pages or n_slots * _ceil_to(max_len,
@@ -122,7 +148,7 @@ class ServeEngine:
                                       self.n_pages)
             self._pool = PagePool(self.n_pages, page_size)
             self._slot_pages: Dict[int, List[int]] = {}
-        self.scheduler = FIFOScheduler()
+        self.scheduler = FIFOScheduler(policy=scheduler_policy)
         self._next_rid = 0
         self._results: Dict[int, List[int]] = {}
         self._done: Dict[int, bool] = {}
@@ -141,6 +167,7 @@ class ServeEngine:
         self._insert = jax.jit(model.insert_cache)
         if self._paged:
             self._insert_paged = jax.jit(model.insert_paged)
+            self._grow_tables = jax.jit(model.grow_page_table)
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -158,18 +185,24 @@ class ServeEngine:
             assert req.tokens.size <= self.prefill_len, \
                 (req.tokens.size, self.prefill_len)
         if self._bounded_cache and self._paged:
-            # paged: the only hard bound is the request's own page-table
-            # row — prompt + budget may exceed max_len (the PR-2 segment
-            # bound is gone); admission waits for free pages instead
+            # paged: prompt + budget may exceed max_len (the PR-2 segment
+            # bound is gone). The real bounds are the request's own
+            # page-table row and the pool itself — a footprint the pool
+            # can never cover would preempt everything and still deadlock
             needed = self._pages_needed(req)
-            assert needed <= self.pages_per_slot, \
-                f"request needs {needed} pages " \
-                f"(prompt {req.prompt_len} + budget {max_new_tokens}), " \
-                f"page table holds {self.pages_per_slot}"
+            cap = min(self.pages_per_slot, self.n_pages)
+            assert needed <= cap, \
+                f"paged mode: request footprint {needed} pages " \
+                f"(ceil((prompt {req.prompt_len} + budget {max_new_tokens} " \
+                f"- 1) / page_size {self.page_size})) exceeds {cap} " \
+                f"(page-table row width {self.pages_per_slot}, " \
+                f"pool {self.n_pages} pages)"
         elif self._bounded_cache:
             assert req.prompt_len + max_new_tokens <= self.max_len, \
-                f"prompt {req.prompt_len} + budget {max_new_tokens} " \
-                f"exceeds slot segment {self.max_len}"
+                f"contiguous mode: prompt {req.prompt_len} + budget " \
+                f"{max_new_tokens} exceeds the per-slot segment " \
+                f"max_len={self.max_len} (paged mode lifts this bound — " \
+                f"pass page_size)"
         # ring-KV keeps only the last `window` keys and SSM state is
         # constant-size, so those families accept prompts of any length
         self._results[rid] = []
@@ -187,6 +220,15 @@ class ServeEngine:
     @property
     def occupancy(self) -> int:
         return len(self._live)
+
+    def page_stats(self) -> dict:
+        """Pool accounting snapshot (empty for unpaged engines)."""
+        if not self._paged:
+            return {}
+        return {"n_pages": self.n_pages, "n_free": self._pool.n_free,
+                "watermark": self._pool.watermark,
+                "grown": self._pool.n_grown,
+                "preemptions": self.n_preemptions}
 
     # ------------------------------------------------------------------
     # Engine steps
@@ -214,24 +256,41 @@ class ServeEngine:
         ``prompt + budget - 1`` (the last sampled token is never fed back)."""
         return self._pool.pages_needed(req.prompt_len + req.max_new_tokens - 1)
 
+    def _pages_at_admit(self, req: Request) -> int:
+        """Pages reserved at admission: just the prompt's under lazy
+        growth, the full worst-case footprint under ``"whole"``."""
+        if self._lazy:
+            return self._pool.pages_needed(req.prompt_len)
+        return self._pages_needed(req)
+
     def _take_wave(self) -> List[Request]:
-        """Pop the next admission wave. Contiguous mode: one request per
-        free slot. Paged mode: additionally gated on free-page accounting —
-        admit while the head request's full reservation (prompt pages +
-        decode-growth pages) fits; strict FIFO, no head-of-line bypass."""
-        if not self._paged:
-            return self.scheduler.take(len(self._free))
+        """Pop the next admission wave: one request per free slot, gated in
+        paged mode on free-page accounting — admit while the head request's
+        admission reservation (prompt pages under lazy growth, the full
+        footprint under whole-request reservation) fits; no head-of-line
+        bypass within the policy. A resumed request whose prompt outgrew a
+        pinned ``prefill_len`` rides a SOLO wave: padding a mixed wave to
+        the resumed length would change co-admitted requests' padded
+        prompt length, which is exactly the shape the determinism contract
+        pins (it feeds MoE expert capacity)."""
         wave: List[Request] = []
         reserved = 0
         while len(wave) < len(self._free):
             r = self.scheduler.peek()
             if r is None:
                 break
-            needed = self._pages_needed(r)
-            if needed > self._pool.n_free - reserved:
-                break                    # backpressure: wait for retires
-            reserved += needed
+            over = (self.prefill_len is not None
+                    and r.tokens.size > self.prefill_len)
+            if over and wave:
+                break                    # over-length request: next wave
+            if self._paged:
+                needed = self._pages_at_admit(r)
+                if needed > self._pool.n_free - reserved:
+                    break                # backpressure: wait for frees
+                reserved += needed
             wave.append(self.scheduler.take(1)[0])
+            if over:
+                break                    # solo wave for the resumed prompt
         return wave
 
     def admit(self) -> List[int]:
@@ -246,8 +305,13 @@ class ServeEngine:
 
         # right-pad prompts; pad the wave batch to n_slots so exactly one
         # prefill program serves every wave size (padding rows are dropped
-        # at insert via an out-of-range slot id)
-        pl = self.prefill_len or max(r.tokens.size for r in wave)
+        # at insert via an out-of-range slot id). A resumed prompt may
+        # exceed a pinned prefill_len — that wave pads to the resumed
+        # length, and _take_wave made it a SOLO wave so no co-admitted
+        # request sees the changed padding
+        pl = max(r.tokens.size for r in wave)
+        if self.prefill_len is not None:
+            pl = max(self.prefill_len, pl)
         toks = np.zeros((ns, pl), np.int32)
         lengths = np.ones((ns,), np.int32)
         for i, r in enumerate(wave):
@@ -275,12 +339,13 @@ class ServeEngine:
         slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
         slot_ids[:w] = slots
         if self._paged:
-            # allocate each request's full reservation now; decode appends
-            # through the table without ever allocating mid-flight
+            # lazy: reserve only the prompt's pages — decode grows the
+            # table on page-boundary crossings. whole: reserve the full
+            # footprint so decode never allocates mid-flight
             tables = np.full((ns, self.pages_per_slot), self.n_pages,
                              np.int32)
             for i, (slot, r) in enumerate(zip(slots, wave)):
-                pages = self._pool.alloc(self._pages_needed(r))
+                pages = self._pool.alloc(self._pages_at_admit(r))
                 self._slot_pages[slot] = pages
                 tables[i, :len(pages)] = pages
             self._cache = self._insert_paged(self._cache, wave_cache,
@@ -288,14 +353,17 @@ class ServeEngine:
         else:
             self._cache = self._insert(self._cache, wave_cache, slot_ids)
 
-        # per-slot sampling state + per-request PRNG chains
+        # per-slot sampling state + per-request PRNG chains; a preempted
+        # request resumes from its key snapshot so its sample stream stays
+        # aligned with its token count
         sl = jnp.asarray(np.asarray(slots, np.int32))
         self._temps = self._temps.at[sl].set(jnp.asarray(
             [r.sampling.temperature for r in wave], jnp.float32))
         self._topks = self._topks.at[sl].set(jnp.asarray(
             [r.sampling.top_k for r in wave], jnp.int32))
         self._keys = self._keys.at[sl].set(jnp.stack(
-            [jax.random.PRNGKey(r.sampling.seed) for r in wave]))
+            [jax.random.PRNGKey(r.sampling.seed) if r.key_override is None
+             else jnp.asarray(r.key_override, jnp.uint32) for r in wave]))
 
         # first token: scatter wave-row logits into slot rows, sample
         lg = jnp.zeros((ns, logits.shape[-1]), logits.dtype)
@@ -303,14 +371,23 @@ class ServeEngine:
         mask = np.zeros((ns,), bool)
         mask[slots] = True
         for slot, r in zip(slots, wave):
-            self._live[slot] = _Slot(r)
+            self._live[slot] = _Slot(r, length=r.prompt_len)
         return self._sample_and_commit(lg, mask)
 
     def decode(self) -> List[int]:
-        """One jitted decode step over the full slot batch."""
+        """One jitted decode step over the full slot batch. Lazy paged
+        mode first grows any slot whose write position crossed a page
+        boundary — preempting the lowest-priority request if the pool is
+        dry — so the jitted step itself never allocates."""
         self._ensure_state()
+        if self._lazy:
+            self._grow_pages()
+        if not self._live:
+            return []
         logits, self._cache = self._decode(self.params, self._cache,
                                            self._last_tok)
+        for st in self._live.values():
+            st.length += 1
         mask = np.zeros((self.n_slots,), bool)
         mask[list(self._live)] = True
         return self._sample_and_commit(logits[:, 0], mask)
@@ -334,6 +411,91 @@ class ServeEngine:
             got = self.result(rid)
             out[i, :got.size] = got
         return out
+
+    # ------------------------------------------------------------------
+    # Preemption (lazy paged mode; public for any cache family)
+    # ------------------------------------------------------------------
+
+    def preempt(self, rid: Optional[int] = None) -> Optional[int]:
+        """Preempt one in-flight request and re-queue it at the head.
+
+        Default victim is the lowest-priority live request (priority is
+        arrival order, so: the highest rid). Returns the preempted rid, or
+        None when nothing is live. The engine calls this automatically
+        when lazy page growth finds the pool dry; it is public so tests
+        and external policies can force it for ANY cache family (ring-KV /
+        SSM slots hold no pages but preempt the same way).
+        """
+        self._ensure_state()
+        if not self._live:
+            return None
+        if rid is None:
+            slot = max(self._live, key=lambda s: self._live[s].req.rid)
+        else:
+            matches = [s for s, st in self._live.items()
+                       if st.req.rid == rid]
+            assert matches, f"request {rid} is not in flight"
+            slot = matches[0]
+        return self._preempt_slot(slot)
+
+    def _preempt_slot(self, slot: int) -> int:
+        """Snapshot + free + re-queue one slot.
+
+        The victim's generated-so-far tokens are appended to its prompt
+        (budget shrinks by the same amount), its PRNG key chain is
+        snapshotted into ``key_override``, its slot is frozen (length 0)
+        and its pages return to the pool immediately. Re-prefill of
+        prompt + generated reproduces the exact cache the preempted decode
+        had built — prefill/decode parity is the tested invariant — so a
+        greedy request's output is bit-identical to the run that was never
+        preempted, and a sampled request continues its key chain unbroken.
+        """
+        st = self._live.pop(slot)
+        bisect.insort(self._free, slot)
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        if self._paged:
+            self._pool.free(self._slot_pages.pop(slot))
+        req = st.req
+        gen = self._results[req.rid][-st.generated:]
+        resumed = Request(
+            req.rid, np.concatenate([req.tokens,
+                                     np.asarray(gen, np.int32)]),
+            req.max_new_tokens - st.generated, req.sampling, req.frontend,
+            key_override=np.asarray(self._keys)[slot])
+        self.scheduler.add_front(resumed)
+        self.n_preemptions += 1
+        return req.rid
+
+    def _grow_pages(self) -> None:
+        """Lazy growth pre-pass: allocate the next page for every live
+        slot whose write position (== its host-mirrored length) crossed
+        its page-table frontier, then push the new table rows to the
+        device in one fixed-shape jitted scatter. When the pool can't
+        cover the growth, preempt lowest-priority live requests (possibly
+        a growing request itself — freeing it both clears its demand and
+        returns its pages) until it can; priority is a total order on
+        arrival, so the earliest-arrived request always makes progress and
+        the engine can never preempt itself into a livelock."""
+        ps = self.page_size
+        growing = [s for s, st in self._live.items()
+                   if st.length // ps >= len(self._slot_pages[s])]
+        while growing and self._pool.n_free < len(growing):
+            victim = max(self._live, key=lambda s: self._live[s].req.rid)
+            self._preempt_slot(victim)
+            growing = [s for s in growing if s != victim]
+        if not growing:
+            return
+        slot_ids = np.full((self.n_slots,), self.n_slots, np.int32)
+        tables = np.full((self.n_slots, self.pages_per_slot), self.n_pages,
+                         np.int32)
+        for i, slot in enumerate(growing):
+            pages = self._slot_pages[slot]
+            pages += self._pool.grow(1)
+            assert len(pages) <= self.pages_per_slot, (slot, len(pages))
+            slot_ids[i] = slot
+            tables[i, :len(pages)] = pages
+        self._cache = self._grow_tables(self._cache, jnp.asarray(slot_ids),
+                                        jnp.asarray(tables))
 
     # ------------------------------------------------------------------
     # Internals

@@ -8,12 +8,21 @@ module is the HOST side: a free-list allocator plus per-request accounting.
 The device side (pool arrays + page tables) lives in ``models/lm.py`` and
 the paged flash-decode path in ``kernels/``.
 
-Allocation is whole-request: admission reserves every page a request can
-ever touch (``pages_needed(prompt + budget - 1)``), so decode never
-allocates mid-flight and can never deadlock; retire frees the pages
-immediately (early EOS returns the unused tail too). Pages are uniform, so
-"fragmentation" reduces to free-list reuse — freed pages are handed out
-lowest-index-first for deterministic page tables.
+Allocation is LAZY by default (ISSUE 4): admission reserves only the pages
+covering a request's *prompt*, and the engine ``grow``s the request by one
+page whenever its length crosses a page boundary — FlashBias's Theta(NR)
+factor-in-cache layout makes a page cheap enough that on-demand growth is
+pure win over stranding the whole worst-case footprint at admit. When the
+pool runs dry mid-flight the engine preempts the lowest-priority in-flight
+request instead of deadlocking (see ``ServeEngine``). The PR-3
+whole-request reservation mode is still available for A/B
+(``page_reservation="whole"``); under it decode never allocates.
+
+Pages are uniform, so "fragmentation" reduces to free-list reuse — freed
+pages are handed out lowest-index-first for deterministic page tables. The
+pool also keeps a high-water mark (``watermark``) of pages simultaneously
+in use plus a count of mid-flight ``grow`` allocations, so benchmarks and
+tests can see how much memory lazy growth actually commits.
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ class PagePool:
         self._free: List[int] = list(range(n_pages))   # heap, lowest first
         heapq.heapify(self._free)
         self._allocated = [False] * n_pages
+        self._watermark = 0                # peak pages simultaneously in use
+        self._grown = 0                    # pages allocated via grow()
 
     # ------------------------------------------------------------------
     # Accounting
@@ -42,6 +53,22 @@ class PagePool:
     def n_free(self) -> int:
         return len(self._free)
 
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def watermark(self) -> int:
+        """High-water mark: the most pages ever simultaneously allocated.
+        Under lazy growth this is the pool's real memory commitment — the
+        number whole-request reservation would have pinned at admit."""
+        return self._watermark
+
+    @property
+    def n_grown(self) -> int:
+        """Pages allocated mid-flight via ``grow`` (vs at admission)."""
+        return self._grown
+
     def pages_needed(self, n_tokens: int) -> int:
         """Pages covering positions ``0 .. n_tokens-1`` (>= 1)."""
         return max(1, -(-int(n_tokens) // self.page_size))
@@ -50,7 +77,7 @@ class PagePool:
         return n <= self.n_free
 
     # ------------------------------------------------------------------
-    # Alloc / free
+    # Alloc / grow / free
     # ------------------------------------------------------------------
 
     def alloc(self, n: int) -> List[int]:
@@ -62,6 +89,16 @@ class PagePool:
         for p in pages:
             assert not self._allocated[p], f"double allocation of page {p}"
             self._allocated[p] = True
+        self._watermark = max(self._watermark, self.n_used)
+        return pages
+
+    def grow(self, n: int = 1) -> List[int]:
+        """Allocate ``n`` more pages for a request already in flight (its
+        length crossed a page boundary). Same free list as ``alloc`` —
+        the separate entry point exists so the pool can account lazily
+        grown pages apart from admission reservations."""
+        pages = self.alloc(n)
+        self._grown += n
         return pages
 
     def free(self, pages: Iterable[int]) -> None:

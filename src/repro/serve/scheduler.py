@@ -1,12 +1,23 @@
-"""FIFO request scheduler for the continuous-batching engine.
+"""Request scheduler for the continuous-batching engine.
 
-Host-side and deliberately dumb: requests join a FIFO queue; whenever the
-engine has freed slots it asks for the next admission wave. Admission never
-reorders (no head-of-line bypass, no length bucketing), so a request's
-admission step is a pure function of the arrival order — which keeps the
-engine's per-request reproducibility contract easy to reason about.
-Smarter policies (shortest-prompt-first, prefill/decode interleaving
-budgets) can swap in behind the same two-method surface.
+Host-side and deliberately simple: requests join a queue; whenever the
+engine has freed slots it asks for the next admission wave. The default
+``policy="fifo"`` never reorders (no head-of-line bypass, no length
+bucketing), so a request's admission step is a pure function of the arrival
+order — which keeps the engine's per-request reproducibility contract easy
+to reason about. ``policy="spf"`` (shortest-prompt-first) is an opt-in
+toggle that admits the queued request with the smallest prompt first
+(stable: ties break on arrival order) — it trades the arrival-order
+guarantee for lower head-of-line blocking when prompts are wildly mixed.
+
+Preempted requests re-enter through ``add_front`` and always resume BEFORE
+any queued arrival, under either policy: a preempted request already spent
+pool pages and prefill FLOPs once, so letting arrivals overtake it would
+both starve it and re-inflate the very memory pressure that forced the
+preemption. Within the front queue, lower request ids (earlier arrivals)
+stay ahead — preemption priority is arrival order, so resume priority is
+too. Smarter policies (prefill/decode interleaving budgets) can swap in
+behind the same surface.
 """
 from __future__ import annotations
 
@@ -23,12 +34,19 @@ __all__ = ["Request", "FIFOScheduler"]
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (host-side descriptor)."""
+    """One generation request (host-side descriptor).
+
+    ``key_override`` carries a preempted request's PRNG key snapshot: the
+    sampler consumes one split per emitted token, so resuming from the
+    snapshot (instead of re-seeding from ``sampling.seed``) keeps the
+    sample stream bit-identical to the run that was never preempted.
+    """
     rid: int
     tokens: np.ndarray                        # (T,) int32 prompt
     max_new_tokens: int
     sampling: SamplingParams = SamplingParams()
     frontend: Optional[np.ndarray] = None     # (F, D) precomputed embeddings
+    key_override: Optional[np.ndarray] = None  # (2,) uint32 resume PRNG key
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -43,25 +61,59 @@ class Request:
 
 
 class FIFOScheduler:
-    """Arrival-order admission into freed slots."""
+    """Admission into freed slots: FIFO by default, optional SPF toggle."""
 
-    def __init__(self):
-        self._queue: Deque[Request] = deque()
+    def __init__(self, policy: str = "fifo"):
+        assert policy in ("fifo", "spf"), policy
+        self.policy = policy
+        self._front: Deque[Request] = deque()   # preempted, resume first
+        self._queue: Deque[Request] = deque()   # arrivals
 
     def __len__(self) -> int:
-        return len(self._queue)
+        return len(self._front) + len(self._queue)
 
     def add(self, req: Request) -> None:
         self._queue.append(req)
 
+    def add_front(self, req: Request) -> None:
+        """Re-queue a preempted request ahead of every arrival. Earlier
+        arrivals (lower rid) stay ahead within the front queue, matching
+        the engine's preemption priority."""
+        i = 0
+        while i < len(self._front) and self._front[i].rid < req.rid:
+            i += 1
+        self._front.insert(i, req)
+
+    def _pick(self) -> int:
+        """Index into ``_queue`` of the next request under ``policy``
+        (-1 when empty). Callers drain ``_front`` first."""
+        if not self._queue:
+            return -1
+        if self.policy == "spf":
+            return min(range(len(self._queue)),
+                       key=lambda i: (self._queue[i].prompt_len, i))
+        return 0
+
     def peek(self) -> Optional[Request]:
-        """Head of the queue without popping (None when empty) — lets the
-        engine gate admission on resources (free pages) without reordering."""
-        return self._queue[0] if self._queue else None
+        """Next request without popping (None when empty) — lets the
+        engine gate admission on resources (free pages) without losing
+        its place in the queue."""
+        if self._front:
+            return self._front[0]
+        i = self._pick()
+        return None if i == -1 else self._queue[i]
 
     def take(self, n: int) -> List[Request]:
-        """Pop up to ``n`` requests in arrival order."""
-        wave = []
-        while self._queue and len(wave) < n:
+        """Pop up to ``n`` requests in policy order (front queue first)."""
+        wave: List[Request] = []
+        while len(wave) < n:
+            if self._front:
+                wave.append(self._front.popleft())
+                continue
+            i = self._pick()
+            if i == -1:
+                break
+            self._queue.rotate(-i)
             wave.append(self._queue.popleft())
+            self._queue.rotate(i)
         return wave

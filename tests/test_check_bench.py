@@ -1,0 +1,120 @@
+"""scripts/check_bench.py — the CI benchmark-regression gate must pass on
+healthy inputs, demonstrably FAIL on synthetic regressed inputs (a gate
+that can't fail isn't one), and support --update-baseline."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    os.path.join(os.path.dirname(__file__), "..", "scripts",
+                 "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+def _write(path, payload):
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return str(path)
+
+
+def _healthy_kernels(speedup=1.0):
+    return {"dense_vs_factored": {"speedup": speedup, "seq_len": 128}}
+
+
+def _healthy_serve(decode=2000.0, ratio=1.0):
+    return {
+        "points": [
+            {"occupancy": 1, "decode_tokens_per_s": decode / 2,
+             "prefill_tokens_per_s": 1.0},
+            {"occupancy": 4, "decode_tokens_per_s": decode,
+             "prefill_tokens_per_s": 1.0},
+        ],
+        "lazy_vs_whole": {"occupancy": 4, "ratio": ratio},
+    }
+
+
+@pytest.fixture
+def files(tmp_path):
+    bdir = tmp_path / "baselines"
+    bdir.mkdir()
+    _write(bdir / check_bench.KERNELS_BASELINE, {"speedup": 1.0})
+    _write(bdir / check_bench.SERVE_BASELINE,
+           {"occupancy": 4, "decode_tokens_per_s": 2000.0})
+    kernels = _write(tmp_path / "k.json", _healthy_kernels())
+    serve = _write(tmp_path / "s.json", _healthy_serve())
+    return tmp_path, str(bdir), kernels, serve
+
+
+def _run(bdir, kernels, serve, *extra):
+    return check_bench.main(["--kernels", kernels, "--serve", serve,
+                             "--baseline-dir", bdir, *extra])
+
+
+def test_healthy_inputs_pass(files):
+    tmp, bdir, kernels, serve = files
+    assert _run(bdir, kernels, serve) == 0
+    # a drop inside the band also passes (smoke-noise tolerant)
+    k2 = _write(tmp / "k2.json", _healthy_kernels(speedup=0.8))
+    s2 = _write(tmp / "s2.json", _healthy_serve(decode=1500.0, ratio=0.85))
+    assert _run(bdir, k2, s2) == 0
+
+
+def test_regressed_speedup_fails(files):
+    tmp, bdir, _, serve = files
+    bad = _write(tmp / "bad_k.json", _healthy_kernels(speedup=0.5))
+    assert _run(bdir, bad, serve) == 1
+
+
+def test_regressed_serve_decode_fails(files):
+    tmp, bdir, kernels, _ = files
+    bad = _write(tmp / "bad_s.json", _healthy_serve(decode=900.0))
+    assert _run(bdir, kernels, bad) == 1
+
+
+def test_regressed_lazy_ratio_fails(files):
+    tmp, bdir, kernels, _ = files
+    bad = _write(tmp / "bad_r.json", _healthy_serve(ratio=0.5))
+    assert _run(bdir, kernels, bad) == 1
+
+
+def test_tolerance_flag_widens_band(files):
+    tmp, bdir, kernels, _ = files
+    near = _write(tmp / "near.json", _healthy_serve(decode=1500.0))
+    assert _run(bdir, kernels, near, "--tolerance", "0.10") == 1
+    assert _run(bdir, kernels, near, "--tolerance", "0.30") == 0
+
+
+def test_update_baseline_roundtrip(files, tmp_path):
+    tmp, _, kernels, serve = files
+    new_dir = str(tmp_path / "fresh")
+    assert _run(new_dir, kernels, serve, "--update-baseline") == 0
+    with open(os.path.join(new_dir, check_bench.SERVE_BASELINE)) as f:
+        sb = json.load(f)
+    assert sb == {"occupancy": 4, "decode_tokens_per_s": 2000.0}
+    assert _run(new_dir, kernels, serve) == 0
+
+
+def test_occupancy_mismatch_with_baseline_fails(files):
+    """A bench whose highest measured occupancy no longer matches the
+    committed baseline's occupancy is not comparable — fail loudly instead
+    of comparing different workloads."""
+    tmp, bdir, kernels, _ = files
+    shrunk = _healthy_serve()
+    shrunk["points"] = shrunk["points"][:1]      # occ 1 only
+    s = _write(tmp / "occ1.json", shrunk)
+    assert _run(bdir, kernels, s) == 1
+
+
+def test_gates_highest_occupancy_point(files):
+    """The serve gate reads the HIGHEST-occupancy point, not list order."""
+    tmp, bdir, kernels, _ = files
+    shuffled = _healthy_serve()
+    shuffled["points"] = shuffled["points"][::-1]
+    s = _write(tmp / "shuf.json", shuffled)
+    occ, tps = check_bench.serve_decode_point(json.load(open(s)))
+    assert (occ, tps) == (4, 2000.0)
+    assert _run(bdir, kernels, s) == 0

@@ -162,9 +162,10 @@ def test_paged_accepts_request_beyond_max_len():
 
 
 def test_oom_admission_backpressure():
-    """Pool sized for ~one request: admission must serialize the traffic
-    (free-page gating, FIFO order) and every request still completes with
-    its alone-run output."""
+    """Pool sized for ~one request: free-page gating (and, under the
+    default lazy reservation, mid-flight preemption when growth finds the
+    pool dry) must keep the traffic within the pool, in FIFO order, and
+    every request still completes with its alone-run output."""
     cfg, model, params = _model("stablelm_12b")
     kw = dict(max_len=32, n_slots=2, prefill_len=10, page_size=8, n_pages=3)
     prompts = _prompts(cfg, (7, 9, 5), seed=6)
@@ -175,8 +176,9 @@ def test_oom_admission_backpressure():
     while eng.occupancy or len(eng.scheduler):
         eng.step()
         max_occ = max(max_occ, eng.occupancy)
-    # 3 pages can hold at most one 2-page request plus one 1-page request;
-    # never both 2-page requests together
+    # 3 pages can hold at most one 2-page footprint plus one 1-page
+    # footprint at a time; lazy growth may overlap prompts but preemption
+    # keeps concurrent footprints within the pool
     assert max_occ <= 2
     for rid, p in zip(rids, prompts):
         alone = _alone(model, params, p, budget, **kw)
