@@ -95,41 +95,28 @@ def collect(arch: str = "stablelm_12b", n_slots: int = 8,
     return result
 
 
-def compare_lazy_whole(arch: str = "stablelm_12b", n_slots: int = 4,
-                       prompt_len: int = 16, steps: int = 16,
-                       occupancy: int = 4, page_size: int = 16) -> dict:
-    """Interleaved lazy-vs-whole A/B at one occupancy (ISSUE 4 headline).
+def _interleaved_decode_ab(engines: dict, vocab: int, prompt_len: int,
+                           steps: int, occupancy: int) -> tuple:
+    """Shared harness for one-occupancy interleaved decode A/Bs.
 
-    Two paged engines serve the identical workload and alternate timed
-    decode steps, so both see the same machine-load profile — the ratio
-    stays meaningful on a noisy CPU runner where two back-to-back
-    ``collect`` calls can land in different load bursts. The CI gate
-    (scripts/check_bench.py) holds ``ratio`` to a tolerance band: lazy
-    growth must sustain whole-request-reservation throughput.
+    Both engines serve the identical workload and alternate timed decode
+    steps, so both see the same machine-load profile — the ratio stays
+    meaningful on a noisy CPU runner where two back-to-back ``collect``
+    calls can land in different load bursts. Min-based timing per engine
+    (the only load-robust estimator on a shared runner). ONE harness
+    serves every A/B gate, so a methodology change (warmup count,
+    estimator, drain) can never skew one gated ratio and not the other.
+
+    Returns ``(tokens_per_s, outputs)``: dicts keyed like ``engines``,
+    with each engine's best-step throughput and per-request output arrays.
     """
-    from repro.configs import smoke_config
-    from repro.models import get_model
-    from repro.models.common import init_params
-    from repro.serve import ServeEngine
-
-    cfg = smoke_config(arch)
-    model = get_model(cfg)
-    params = init_params(model.template(), jax.random.PRNGKey(0))
     budget = steps + 4
-    max_len = -(-(prompt_len + budget + 8) // page_size) * page_size
-    engines = {}
-    for mode in ("whole", "lazy"):
-        engines[mode] = ServeEngine(
-            model, params, max_len=max_len, n_slots=n_slots,
-            prefill_len=prompt_len, page_size=page_size,
-            pages_per_slot=max_len // page_size, page_reservation=mode)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, (prompt_len,)).astype(np.int32)
+    prompts = [rng.integers(0, vocab, (prompt_len,)).astype(np.int32)
                for _ in range(occupancy)]
-    best = {}
+    best, rids = {}, {}
     for mode, eng in engines.items():
-        for p in prompts:
-            eng.submit(p, budget)
+        rids[mode] = [eng.submit(p, budget) for p in prompts]
         eng.admit()
         eng.decode(); eng.decode()           # warm (compile + first growth)
         best[mode] = float("inf")
@@ -140,12 +127,96 @@ def compare_lazy_whole(arch: str = "stablelm_12b", n_slots: int = 4,
             best[mode] = min(best[mode], time.monotonic() - t0)
     for eng in engines.values():
         eng.run()
-    whole_tps = occupancy / best["whole"]
-    lazy_tps = occupancy / best["lazy"]
+    tps = {mode: occupancy / t for mode, t in best.items()}
+    outs = {mode: [engines[mode].result(r) for r in rids[mode]]
+            for mode in engines}
+    return tps, outs
+
+
+def compare_lazy_whole(arch: str = "stablelm_12b", n_slots: int = 4,
+                       prompt_len: int = 16, steps: int = 16,
+                       occupancy: int = 4, page_size: int = 16) -> dict:
+    """Interleaved lazy-vs-whole A/B at one occupancy (ISSUE 4 headline).
+
+    The CI gate (scripts/check_bench.py) holds ``ratio`` to a tolerance
+    band: lazy growth must sustain whole-request-reservation throughput.
+    Timing methodology: ``_interleaved_decode_ab``.
+    """
+    from repro.configs import smoke_config
+    from repro.models import get_model
+    from repro.models.common import init_params
+    from repro.serve import ServeEngine
+
+    cfg = smoke_config(arch)
+    model = get_model(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(0))
+    max_len = -(-(prompt_len + steps + 12) // page_size) * page_size
+    engines = {}
+    for mode in ("whole", "lazy"):
+        engines[mode] = ServeEngine(
+            model, params, max_len=max_len, n_slots=n_slots,
+            prefill_len=prompt_len, page_size=page_size,
+            pages_per_slot=max_len // page_size, page_reservation=mode)
+    tps, _ = _interleaved_decode_ab(engines, cfg.vocab, prompt_len, steps,
+                                    occupancy)
     return {"occupancy": occupancy, "page_size": page_size,
-            "whole_decode_tokens_per_s": whole_tps,
-            "lazy_decode_tokens_per_s": lazy_tps,
-            "ratio": lazy_tps / whole_tps}
+            "whole_decode_tokens_per_s": tps["whole"],
+            "lazy_decode_tokens_per_s": tps["lazy"],
+            "ratio": tps["lazy"] / tps["whole"]}
+
+
+def compare_layout_legacy(arch: str = "stablelm_12b", n_slots: int = 4,
+                          prompt_len: int = 16, steps: int = 16,
+                          occupancy: int = 4, page_size: int = 16) -> dict:
+    """Interleaved kernel-layout vs legacy-layout decode A/B (ISSUE 5).
+
+    Two PAGED engines serve the identical workload from identical params:
+    one with the default kernel-native cache layout (kv-head-major pools,
+    zero-copy into the kernels, capped XLA gather), one with
+    ``cache_layout="legacy"`` (canonical pools, per-step re-layout in
+    ops). The CI gate (scripts/check_bench.py) holds ``ratio`` to a
+    tolerance band around 1.0 — the kernel layout must never be slower
+    than the transpose-per-step path it deleted. Timing methodology:
+    ``_interleaved_decode_ab``.
+
+    Output parity across layouts is recorded as ``outputs_identical``
+    (and warned about), not asserted: the layouts' decode paths sum
+    logits in different orders (concat-fold/chunked vs head-major
+    einsums), so a vocab tie at ULP distance could legitimately flip one
+    greedy argmax — a timing job shouldn't die on that. The HARD parity
+    contract lives in tests/test_cache_layout.py, where seeds are pinned.
+    """
+    from repro.configs import smoke_config
+    from repro.models import get_model
+    from repro.models.common import init_params
+    from repro.serve import ServeEngine
+
+    base = smoke_config(arch)
+    max_len = -(-(prompt_len + steps + 12) // page_size) * page_size
+    engines = {}
+    params = None
+    for mode in ("legacy", "kernel"):
+        cfg = base.replace(cache_layout=mode)
+        model = get_model(cfg)
+        if params is None:
+            params = init_params(model.template(), jax.random.PRNGKey(0))
+        engines[mode] = ServeEngine(
+            model, params, max_len=max_len, n_slots=n_slots,
+            prefill_len=prompt_len, page_size=page_size,
+            pages_per_slot=max_len // page_size)
+    tps, outs = _interleaved_decode_ab(engines, base.vocab, prompt_len,
+                                       steps, occupancy)
+    identical = all(np.array_equal(a, b)
+                    for a, b in zip(outs["kernel"], outs["legacy"]))
+    if not identical:
+        print("# WARNING: layout A/B greedy outputs diverged (likely a "
+              "ULP logit tie; hard parity is tested in "
+              "tests/test_cache_layout.py)")
+    return {"occupancy": occupancy, "page_size": page_size,
+            "legacy_decode_tokens_per_s": tps["legacy"],
+            "kernel_decode_tokens_per_s": tps["kernel"],
+            "outputs_identical": identical,
+            "ratio": tps["kernel"] / tps["legacy"]}
 
 
 def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
@@ -165,6 +236,15 @@ def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
     # whose lazy engine never grows or preempts measures nothing
     data["lazy_vs_whole"] = compare_lazy_whole(
         **{k: v for k, v in kw.items() if k != "occupancies"},
+        occupancy=max(kw.get("occupancies", (4,))))
+    # ISSUE 5: kernel-native vs legacy cache layout, measured not asserted.
+    # Pinned to a page-dense shape (long decode, small pages) regardless of
+    # smoke: the layouts differ in per-step pool/view handling, so the A/B
+    # needs enough pages in flight for that term to rise above host noise
+    # (at steps=16/ps=16 every slot holds ~2 pages and the ratio is noise).
+    data["layout_vs_legacy"] = compare_layout_legacy(
+        **{k: v for k, v in kw.items() if k not in ("occupancies", "steps")},
+        steps=64, page_size=8,
         occupancy=max(kw.get("occupancies", (4,))))
     with open(out_path, "w") as f:
         json.dump(data, f, indent=2)

@@ -18,6 +18,15 @@ than ``--tolerance`` (default 30%) below its committed baseline:
    whole-request-reservation decode throughput at occupancy 4. The two
    engines are timed interleaved (same load profile), so this ratio is
    noise-robust and needs no baseline.
+4. serve: ``layout_vs_legacy.ratio`` — the kernel-native cache layout
+   (ISSUE 5) must be at least as fast as the legacy canonical layout it
+   replaced (>= 1.0 within tolerance). Interleaved like the lazy A/B, so
+   no baseline is needed.
+
+Note on the kernels headline: ``dense_vs_factored`` is the LARGEST point
+of the seq-length sweep (``dense_vs_factored_sweep``) — the paper-scale
+regime where bias IO dominates. Gating a small-N point would gate the
+regime where the factored path legitimately loses.
 
 Baselines live in ``benchmarks/baselines/*.baseline.json``. Refresh them
 from the current BENCH files with::
@@ -64,6 +73,11 @@ def serve_decode_point(bench: dict) -> tuple[int, float]:
 def lazy_vs_whole_ratio(bench: dict) -> float:
     """Interleaved lazy/whole decode throughput ratio (ISSUE 4)."""
     return float(bench["lazy_vs_whole"]["ratio"])
+
+
+def layout_vs_legacy_ratio(bench: dict) -> float:
+    """Interleaved kernel-layout/legacy decode throughput ratio (ISSUE 5)."""
+    return float(bench["layout_vs_legacy"]["ratio"])
 
 
 def check(
@@ -151,6 +165,13 @@ def main(argv=None) -> int:
     check(
         "serve lazy-vs-whole decode ratio",
         lazy_vs_whole_ratio(serve),
+        band,
+        f"interleaved A/B, no baseline, tol {args.tolerance:.0%}",
+        failures,
+    )
+    check(
+        "serve kernel-layout-vs-legacy decode ratio",
+        layout_vs_legacy_ratio(serve),
         band,
         f"interleaved A/B, no baseline, tol {args.tolerance:.0%}",
         failures,

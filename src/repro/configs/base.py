@@ -73,6 +73,9 @@ class ArchConfig:
     remat: str = "dots"           # "none" | "dots" | "full"
     attn_chunk: int = 512         # kv chunk of the XLA flash path
     attn_impl: str = "auto"       # "auto" | "xla" | "pallas" | "pallas_interpret"
+    cache_layout: str = "kernel"  # "kernel" (kv-head-major, zero-copy decode)
+                                  # | "legacy" (canonical (B,S,KVH,hd); kept as
+                                  # the layout_vs_legacy A/B + parity reference)
     ssd_chunk: int = 256          # SSD intra-chunk quadratic block
     grad_accum: int = 1           # microbatches per train step (activation fit)
     grad_rs: bool = False         # pin grads to param shardings (forces the

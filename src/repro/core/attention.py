@@ -119,6 +119,23 @@ def attention(
     if phi_q is not None:
         assert phi_k is not None and phi_q.shape[-1] == phi_k.shape[-1]
 
+    if (phi_q is not None
+            and phi_k.shape[2] in (1, kvh)
+            and jnp.promote_types(jnp.promote_types(phi_q.dtype,
+                                                    phi_k.dtype),
+                                  q.dtype) == q.dtype):
+        # Eq. 3 concat fold: s = [q | phi_q/scale] [k | phi_k]^T * scale —
+        # ONE fused matmul of depth D+R replaces the per-block factor
+        # matmul + add (measurably faster wherever matmul dispatch or the
+        # bias-product temp dominates, e.g. the CPU XLA path). Only taken
+        # when it costs no precision: the key factor must live per kv head
+        # (GQA identity) and concatenation must not downcast the factors
+        # (mixed-precision ALiBi keeps f32 factors against a bf16 q, where
+        # folding would quantize positions to bf16 — that path keeps the
+        # two-matmul form).
+        q, k = flashbias_concat_qk(q, k, phi_q, phi_k, scale)
+        phi_q = phi_k = None
+
     if impl == "dense" or m <= chunk_size:
         return _attention_dense(q, k, v, mask=mask, scale=scale, bias=bias,
                                 phi_q=phi_q, phi_k=phi_k, q_offset=q_offset,
@@ -204,8 +221,8 @@ def _attention_chunked(q, k, v, *, mask, scale, bias, phi_q, phi_k, q_offset,
         phi_q5 = _split_gqa(phi_q, kvh)
         phi_k_b = pad_kv(jnp.broadcast_to(phi_k, (b, m, h, r)))
         phi_k_c = phi_k_b.reshape(b, num_chunks, chunk_size, kvh, g, r)
-    k_c = k_p.reshape(b, num_chunks, chunk_size, kvh, d)
-    v_c = v_p.reshape(b, num_chunks, chunk_size, kvh, d)
+    k_c = k_p.reshape(b, num_chunks, chunk_size, kvh, k.shape[-1])
+    v_c = v_p.reshape(b, num_chunks, chunk_size, kvh, dv)
     bias_c = None
     if bias is not None:
         bias4 = bias if bias.ndim == 4 else bias[None]

@@ -26,6 +26,16 @@ differ (they read ``page_table[b, j]`` to find the physical page). Blocks
 past the request length clamp to the last mapped page, so skipped and
 unmapped pages alias the previous block's index and their copies are
 elided on hardware exactly like the contiguous path's skipped blocks.
+
+Cache layout contract (ISSUE 5): both kernels read KV in the layouts
+declared below — ``(B, KVH, S, *)`` contiguous, ``(KVH, n_pages, ps, *)``
+paged — and since ISSUE 5 the model caches are *stored* in exactly these
+layouts (lane-padded at allocation), so ``ops.py`` passes them zero-copy:
+nobody owns a per-step transpose anymore. The paged ``phi_pages`` factor
+slab may carry a leading kv-head axis of 1 (``(1, n_pages, ps, R)``): the
+kv-head broadcast then happens in its block index map (every kv head reads
+the same physical page block), which is what lets the slab stay a single
+layer- and head-shared copy in HBM.
 """
 from __future__ import annotations
 
@@ -189,7 +199,7 @@ def flash_decode_paged_fwd(
     lengths: jax.Array,                   # (B,) int32
     page_table: jax.Array,                # (B, P) int32 page ids
     phi_q: Optional[jax.Array] = None,    # (B, KVH, G, R)
-    phi_pages: Optional[jax.Array] = None,  # (KVH, n_pages, ps, R)
+    phi_pages: Optional[jax.Array] = None,  # (KVH|1, n_pages, ps, R)
     slopes: Optional[jax.Array] = None,   # (KVH, G)
     *,
     scale: float,
@@ -202,6 +212,10 @@ def flash_decode_paged_fwd(
     are clamped to the last in-length block, whose compute ``pl.when``
     skips). Every page id is clamped into the pool, so a stale table can
     never fault — at worst it reads a page the length mask then discards.
+
+    ``phi_pages`` with a leading kv-head axis of 1 is the layer/kv-head-
+    shared factor slab: its index map pins the head coordinate to 0, so the
+    kv-head broadcast costs nothing (same block, every head).
     """
     b, kvh, g, d = q.shape
     n_pages, ps = k_pages.shape[1], k_pages.shape[2]
@@ -210,12 +224,17 @@ def flash_decode_paged_fwd(
     bias_mode = ("phi" if phi_q is not None
                  else ("alibi" if slopes is not None else "none"))
 
-    def page_map(b_, h_, j, lens_ref, pt_ref):
-        # clamp j to the last in-length block so skipped/unmapped blocks
-        # alias the previous DMA; clamp the id so stale tables stay in-pool
-        last = jnp.maximum(lens_ref[b_] - 1, 0) // ps
-        page = pt_ref[b_, jnp.minimum(j, last)]
-        return (h_, jnp.clip(page, 0, n_pages - 1), 0, 0)
+    def _page_map(h_of):
+        def m(b_, h_, j, lens_ref, pt_ref):
+            # clamp j to the last in-length block so skipped/unmapped blocks
+            # alias the previous DMA; clamp the id so stale tables stay
+            # in-pool
+            last = jnp.maximum(lens_ref[b_] - 1, 0) // ps
+            page = pt_ref[b_, jnp.minimum(j, last)]
+            return (h_of(h_), jnp.clip(page, 0, n_pages - 1), 0, 0)
+        return m
+
+    page_map = _page_map(lambda h_: h_)
 
     grid = (b, kvh, p_max)
     in_specs = [
@@ -226,9 +245,12 @@ def flash_decode_paged_fwd(
     args = [q, k_pages, v_pages]
     if bias_mode == "phi":
         r = phi_q.shape[-1]
+        # kv-head-shared slab (leading axis 1): broadcast via the index map
+        phi_map = (_page_map(lambda h_: 0) if phi_pages.shape[0] == 1
+                   else page_map)
         in_specs += [
             pl.BlockSpec((1, 1, g, r), lambda b_, h_, j, *_: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, ps, r), page_map),
+            pl.BlockSpec((1, 1, ps, r), phi_map),
         ]
         args += [phi_q, phi_pages]
     else:

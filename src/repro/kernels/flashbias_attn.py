@@ -21,6 +21,12 @@ Block shapes are (block_q x D) / (block_k x D) with D, R padded to the
 (= MXU systolic dim), giving a VMEM working set of
 ``(2*block_q + 2*block_k)*(D+R)*4`` bytes ≪ 128 MiB v5e VMEM.
 
+The head-major (B, H, N, D) layout this kernel reads is the repo-wide
+cache/compute layout contract (ops.py module docstring): since ISSUE 5 the
+models project q/k/v head-major directly (``flash_attention(layout=
+"bhsd")``), so no transpose stands between the projections and these
+blocks.
+
 Forward-only: training uses the XLA chunked path (mirroring the paper, which
 uses the Triton kernel for inference and SDPA for training). ``ops.py`` wires
 this kernel as the forward of a ``jax.custom_vjp`` whose backward is the

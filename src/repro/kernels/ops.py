@@ -1,20 +1,42 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 ``flash_attention`` / ``flash_decode`` are the entry points the models call.
-They:
+They dispatch between the Pallas kernel (TPU, or ``interpret=True`` on CPU
+for tests) and the pure-XLA paths, pad tile dims to TPU alignment with
+mathematically inert zeros, and (for training) expose a ``jax.custom_vjp``
+whose backward re-runs attention via the XLA chunked path's VJP
+(flash-style recompute — the paper likewise uses the Triton kernel for
+inference and SDPA autograd for training).
 
-- accept the canonical (B, S, H, D) layout and transpose to the kernels'
-  head-major layout;
-- pad every tile dim to TPU alignment (seq -> block multiple, channels/rank
-  -> 128-lane multiple) with mathematically inert zeros, slicing the result
-  back;
-- dispatch between the Pallas kernel (TPU, or ``interpret=True`` on CPU for
-  tests) and the pure-XLA chunked path in ``repro.core.attention`` (which is
-  what the multi-pod dry-run lowers — Pallas does not lower to the CPU
-  backend);
-- expose a ``jax.custom_vjp``: the backward pass re-runs attention via the
-  XLA chunked path's VJP (flash-style recompute — the paper likewise uses
-  the Triton kernel for inference and SDPA autograd for training).
+Cache layout contract (the decode hot path)
+-------------------------------------------
+
+The kernels consume KV in **kv-head-major** layout, and since ISSUE 5 the
+caches are *stored* that way from allocation, so the jitted decode step
+hands them over zero-copy — there is no per-step transpose, lane-pad or
+factor broadcast of anything pool-sized:
+
+- contiguous / ring KV: ``(B, KVH, S, hd)`` per layer (``kv_layout="bhsd"``).
+  Store ``hd`` as a 128-lane multiple and ``S`` as a multiple of the decode
+  block (128 is always safe) for the zero-copy guarantee; other shapes fall
+  back to a documented pad (correctness, not speed).
+- paged KV: pools ``(KVH, n_pages, ps, hd_pad)`` per layer, ``hd_pad`` lane-
+  padded at ``init_paged_cache``; the per-page ``phi_k`` factor slab stays
+  layer- AND kv-head-shared at ``(n_pages, ps, r_pad)`` — the kv-head
+  broadcast happens in the kernel's block index maps, never as a
+  ``broadcast_to`` on the pool.
+
+Nobody owns a transpose anymore: allocation writes the kernel layout, every
+writer (token scatter, prefill page scatter, ring rotation) writes it, and
+the kernels read it. The canonical ``(B, S, KVH, hd)`` layout remains
+accepted (``kv_layout="bshd"``, the default for direct callers) and is the
+``layout_vs_legacy`` A/B + parity reference: it adapts per call, paying
+exactly the per-step cost the kernel layout deletes.
+
+The XLA fallbacks take cheap views of the kernel layout (head-major
+einsums; the paged gather is capped at ``ceil(max(lengths)/page_size)``
+pages when a static bound is known — pass ``max_pages`` from a host-side
+length mirror, or call with concrete ``lengths``).
 """
 from __future__ import annotations
 
@@ -26,11 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attention as attn_mod
-from repro.core.attention import MaskSpec
+from repro.core.attention import DEFAULT_MASK_VALUE, MaskSpec
 from repro.kernels import flash_decode as _fd
 from repro.kernels import flashbias_attn as _fa
 
-__all__ = ["flash_attention", "flash_decode", "IMPLS"]
+__all__ = ["flash_attention", "flash_decode", "resolve_impl", "IMPLS"]
 
 IMPLS = ("xla", "pallas", "pallas_interpret", "io_stub")
 
@@ -54,11 +76,35 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve_impl(impl: str) -> str:
+def resolve_impl(impl: str) -> str:
+    """Public impl resolution ("auto" -> "pallas" on TPU, "xla" elsewhere).
+
+    Models use this to pick the compute layout that will be zero-copy for
+    the impl that actually runs (head-major for the Pallas kernels)."""
     if impl == "auto":
         return "pallas" if _on_tpu() else "xla"
     assert impl in IMPLS, impl
     return impl
+
+
+def _pick_block(s_len: int, want: int) -> int:
+    """Largest multiple-of-8 divisor of ``s_len`` that is <= ``want``
+    (8 = TPU sublane: Mosaic rejects blocks whose second-minor dim isn't a
+    multiple of it). Returns ``s_len`` itself below 8 (single tiny block,
+    same as the canonical path's ``min(block_k, S)``) and 0 when no
+    aligned divisor exists — the caller then pads the seq axis once.
+
+    Under the cache layout contract (S a multiple of 128, or S <= want)
+    this finds >= min(want, 128), so the kernel-layout decode path never
+    pads the cache sequence axis. Trace-time Python: <= want/8 steps."""
+    if s_len < 8:
+        return s_len
+    b = (min(want, s_len) // 8) * 8
+    while b >= 8:
+        if s_len % b == 0:
+            return b
+        b -= 8
+    return 0
 
 
 # ---------------------------------------------------------------------------
@@ -123,7 +169,41 @@ def _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
     return out.transpose(0, 2, 1, 3)[:, :n, :, :dv]
 
 
-def _io_stub_path(q, k, v, phi_q, phi_k):
+def _pallas_path_hm(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
+                    block_q, block_k, interpret):
+    """Head-major (``layout="bhsd"``) Pallas dispatch: the kernel's native
+    layout arrives from the caller, so only tile padding remains (token-
+    and channel-sized, never a whole-tensor transpose)."""
+    b, h, n, d = q.shape
+    kvh, m = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    n_p, m_p = _ceil_to(n, block_q), _ceil_to(m, block_k)
+    d_p, dv_p = _ceil_to(d, _LANE), _ceil_to(dv, _LANE)
+
+    qt = _pad_axis(_pad_axis(q, 2, n_p), 3, d_p)
+    kt = _pad_axis(_pad_axis(k, 2, m_p), 3, d_p)
+    vt = _pad_axis(_pad_axis(v, 2, m_p), 3, dv_p)
+
+    pqt = pkt = None
+    if phi_q is not None:
+        r = phi_q.shape[-1]
+        r_p = _ceil_to(r, _LANE)
+        if phi_k.shape[1] not in (1, h):     # per-kv-head: expand per group
+            assert h % phi_k.shape[1] == 0, (phi_k.shape, h)
+            phi_k = jnp.repeat(phi_k, h // phi_k.shape[1], axis=1)
+        phi_k_full = jnp.broadcast_to(phi_k, (b, h, m, r))
+        pqt = _pad_axis(_pad_axis(phi_q, 2, n_p), 3, r_p)
+        pkt = _pad_axis(_pad_axis(phi_k_full, 2, m_p), 3, r_p)
+    slopes2 = slopes.reshape(h, 1) if slopes is not None else None
+
+    out = _fa.flashbias_attention_fwd(
+        qt, kt, vt, pqt, pkt, slopes2, scale=scale, mask_kind=mask_kind,
+        window=window, kv_len=m, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out[:, :, :n, :dv]
+
+
+def _io_stub_path(q, k, v, phi_q, phi_k, dv):
     """Deployment-IO accounting stub (dry-run only, ``impl="io_stub"``).
 
     The Pallas kernel's HBM traffic is exactly: read q, k, v (+ factors)
@@ -132,55 +212,76 @@ def _io_stub_path(q, k, v, phi_q, phi_k):
     lowering with it measures the *deployment* memory term (the XLA chunked
     fallback materializes its softmax pipeline, inflating bytes ~10x).
     Every input is consumed through a full-read reduction so XLA cannot
-    DCE the loads.
+    DCE the loads. Layout-agnostic: the output mirrors q's leading axes.
     """
-    b, n, h, d = q.shape
-    dv = v.shape[-1]
     eps = jnp.asarray(1e-30, jnp.float32)
     dep = (jnp.sum(k.astype(jnp.float32)) + jnp.sum(v.astype(jnp.float32)))
     if phi_q is not None:
         dep = dep + jnp.sum(phi_q.astype(jnp.float32)) \
             + jnp.sum(phi_k.astype(jnp.float32))
     o = q[..., :1].astype(jnp.float32) * eps + dep * eps
-    o = jnp.broadcast_to(o, (b, n, h, dv))
+    o = jnp.broadcast_to(o, (*q.shape[:3], dv))
     return o.astype(q.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
+def _to_bshd(x):
+    return None if x is None else x.transpose(0, 2, 1, 3)
+
+
+def _xla_path_any_layout(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                         scale, layout):
+    """XLA chunked fallback for either layout — the single canonicalize
+    point for ``"bhsd"`` inputs (cheap views in, transposed view out;
+    prefill-sized, one-time). The custom_vjp forward AND its backward
+    recompute both go through here, so they can never desynchronize."""
+    if layout == "bhsd":
+        o = _xla_path(_to_bshd(q), _to_bshd(k), _to_bshd(v),
+                      _to_bshd(phi_q), _to_bshd(phi_k), slopes,
+                      mask_kind, window, scale)
+        return o.transpose(0, 2, 1, 3)
+    return _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                     scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
 def _flash_attention_core(q, k, v, phi_q, phi_k, slopes,
-                          mask_kind, window, scale, impl, block_q, block_k):
+                          mask_kind, window, scale, impl, block_q, block_k,
+                          layout):
     if impl == "io_stub":
-        return _io_stub_path(q, k, v, phi_q, phi_k)
+        return _io_stub_path(q, k, v, phi_q, phi_k, v.shape[-1])
     if impl == "xla":
-        return _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
-                         scale)
-    return _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
-                        scale, block_q, block_k,
-                        interpret=(impl == "pallas_interpret"))
+        return _xla_path_any_layout(q, k, v, phi_q, phi_k, slopes,
+                                    mask_kind, window, scale, layout)
+    path = _pallas_path_hm if layout == "bhsd" else _pallas_path
+    return path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                scale, block_q, block_k,
+                interpret=(impl == "pallas_interpret"))
 
 
 def _fwd(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale, impl,
-         block_q, block_k):
+         block_q, block_k, layout):
     out = _flash_attention_core(q, k, v, phi_q, phi_k, slopes, mask_kind,
-                                window, scale, impl, block_q, block_k)
+                                window, scale, impl, block_q, block_k, layout)
     return out, (q, k, v, phi_q, phi_k, slopes)
 
 
-def _bwd(mask_kind, window, scale, impl, block_q, block_k, res, g):
+def _bwd(mask_kind, window, scale, impl, block_q, block_k, layout, res, g):
     q, k, v, phi_q, phi_k, slopes = res
     if impl == "io_stub":
         # deployment backward IO: the flash backward re-reads q,k,v(,phi) and
         # the cotangent once and writes dq,dk,dv(,dphi) once — the stub's own
         # vjp has exactly that HBM footprint.
         def fs(q, k, v, phi_q, phi_k):
-            return _io_stub_path(q, k, v, phi_q, phi_k)
+            return _io_stub_path(q, k, v, phi_q, phi_k, v.shape[-1])
         _, vjp = jax.vjp(fs, q, k, v, phi_q, phi_k)
         return vjp(g) + (None,)
 
-    # Recompute forward through the differentiable XLA path (flash recompute).
+    # Recompute forward through the differentiable XLA path (flash
+    # recompute); head-major inputs flow through the canonicalizing views,
+    # so their cotangents come back head-major automatically.
     def f(q, k, v, phi_q, phi_k, slopes):
-        return _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
-                         scale)
+        return _xla_path_any_layout(q, k, v, phi_q, phi_k, slopes,
+                                    mask_kind, window, scale, layout)
     _, vjp = jax.vjp(f, q, k, v, phi_q, phi_k, slopes)
     return vjp(g)
 
@@ -202,59 +303,137 @@ def flash_attention(
     impl: str = "auto",
     block_q: int = 128,
     block_k: int = 128,
+    layout: str = "bshd",
 ) -> jax.Array:
-    """FlashBias attention, (B, N, H, D) layout.
+    """FlashBias attention.
+
+    ``layout="bshd"`` (default): canonical (B, N, H, D) in and out.
+    ``layout="bhsd"``: the kernels' head-major (B, H, N, D) in and out —
+    zero-copy into the Pallas kernel (models that keep kernel-layout caches
+    project straight into this layout; see the module docstring).
 
     Exactly one of {phi_q+phi_k, slopes, neither} selects the bias mode
     (factored / in-kernel ALiBi / none). Differentiable in q, k, v, phi_*.
     """
+    assert layout in ("bshd", "bhsd"), layout
     scale = (1.0 / float(np.sqrt(q.shape[-1]))) if scale is None else scale
     assert not (phi_q is not None and slopes is not None)
     return _flash_attention_core(q, k, v, phi_q, phi_k, slopes, mask_kind,
-                                 window, scale, _resolve_impl(impl),
-                                 block_q, block_k)
+                                 window, scale, resolve_impl(impl),
+                                 block_q, block_k, layout)
 
 
 # ---------------------------------------------------------------------------
 # Decode (one token, KV cache) — inference only, no vjp needed
 # ---------------------------------------------------------------------------
 
+def _static_page_cap(lengths, ps: int, p_slot: int,
+                     max_pages: Optional[int]) -> int:
+    """Static bound on the pages any request can reference this step.
+
+    Preference order: an explicit ``max_pages`` (the serve engine derives
+    one from its host-side length mirror), else ``ceil(max(lengths)/ps)``
+    when ``lengths`` is concrete (eager callers/tests), else the full
+    page-table width (nothing static is known under tracing)."""
+    if max_pages is not None:
+        return max(1, min(int(max_pages), p_slot))
+    try:
+        longest = int(jax.device_get(jnp.max(lengths)))
+    except jax.errors.ConcretizationTypeError:
+        return p_slot
+    return max(1, min(-(-longest // ps), p_slot))
+
+
+def _xla_decode_head_major(q, k_cache, v_cache, lengths, phi_q, phi_k,
+                           slopes, scale):
+    """XLA decode over kernel-layout caches — head-major einsums, no
+    transpose or per-head factor materialization of anything pool-sized.
+
+    q (B,1,H,D); k/v (B,KVH,S,E); phi_k (B,KVH,S,R) or kv-head-shared
+    (B,S,R); slopes (H,). Factor ranks align by slicing the wider operand
+    (stored factor slabs are zero-padded to the lane boundary, so slicing
+    them back is exact)."""
+    b, _, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // kvh
+    qg = q[:, 0].reshape(b, kvh, g, d).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    if kf.shape[-1] > d:                      # lane-padded pool vs raw q
+        kf = kf[..., :d]
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, kf) * scale
+    if phi_q is not None:
+        r = min(phi_q.shape[-1], phi_k.shape[-1])
+        pq = phi_q[:, 0].reshape(b, kvh, g, -1)[..., :r].astype(jnp.float32)
+        pk = phi_k[..., :r].astype(jnp.float32)
+        if pk.ndim == 3:                      # (B, S, R) kv-head-shared
+            s = s + jnp.einsum("bkgr,bsr->bkgs", pq, pk)
+        else:                                 # (B, KVH, S, R)
+            s = s + jnp.einsum("bkgr,bksr->bkgs", pq, pk)
+    k_pos = jnp.arange(s_len)
+    if slopes is not None:
+        rel = (k_pos[None] - (lengths - 1)[:, None]).astype(jnp.float32)
+        s = s + slopes.reshape(kvh, g)[None, :, :, None] * rel[:, None, None]
+    valid = k_pos[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, DEFAULT_MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bkse->bkge", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, h, dv).astype(q.dtype)
+
+
 def flash_decode(
     q: jax.Array,                        # (B, 1, H, D)
-    k_cache: jax.Array,                  # (B, S, KVH, D); paged: (P, ps, KVH, D)
-    v_cache: jax.Array,                  # (B, S, KVH, Dv); paged: (P, ps, KVH, Dv)
+    k_cache: jax.Array,                  # see kv_layout below
+    v_cache: jax.Array,
     lengths: jax.Array,                  # (B,) int32
     phi_q: Optional[jax.Array] = None,   # (B, 1, H, R)
-    phi_k: Optional[jax.Array] = None,   # (B, S, KVH|H|1, R);
-                                         # paged slab: (P, ps, R) | (P, ps, KVH, R)
+    phi_k: Optional[jax.Array] = None,
     slopes: Optional[jax.Array] = None,  # (H,)
     *,
     scale: Optional[float] = None,
     impl: str = "auto",
     block_k: int = 512,
     page_table: Optional[jax.Array] = None,  # (B, P_slot) int32 -> paged mode
+    kv_layout: str = "bshd",
+    max_pages: Optional[int] = None,
 ) -> jax.Array:
     """Single-token decode against a KV cache. Returns (B, 1, H, Dv).
 
-    With ``page_table`` the caches are a shared PAGE POOL: ``k_cache`` /
-    ``v_cache`` are ``(n_pages, page_size, KVH, *)`` and ``phi_k`` (if any)
-    is the per-page factor slab — ``(n_pages, page_size, R)`` shared across
-    kv heads or ``(n_pages, page_size, KVH, R)``. ``page_table[b, j]`` maps
-    request b's j-th logical block to its physical page; entries beyond the
-    mapped prefix are ignored (clamped + length-masked). The Pallas path
-    resolves pages through scalar-prefetched block index maps (skipped and
-    unmapped pages alias their neighbour's copy); the XLA/io_stub paths
-    gather the pool into each request's logical view first.
+    ``kv_layout`` selects the cache layout (module docstring has the full
+    contract):
+
+    - ``"bshd"`` (canonical, the parity/legacy reference): ``k_cache`` /
+      ``v_cache`` are ``(B, S, KVH, *)``; paged pools ``(n_pages, ps, KVH,
+      *)``; ``phi_k`` ``(B, S, KVH|H|1, R)`` or the paged slab
+      ``(n_pages, ps, R)`` / ``(n_pages, ps, KVH, R)``. Adapted to the
+      kernels per call (the cost the kernel layout deletes).
+    - ``"bhsd"`` (kernel-native, what the models store): ``(B, KVH, S, *)``;
+      paged pools ``(KVH, n_pages, ps, *)`` handed to the Pallas kernel
+      zero-copy; ``phi_k`` ``(B, KVH, S, R)`` or the layer/kv-head-shared
+      paged slab ``(n_pages, ps, r_pad)`` (kv-head broadcast happens in the
+      kernel block index maps).
+
+    With ``page_table`` the caches are a shared PAGE POOL; ``page_table[b,
+    j]`` maps request b's j-th logical block to its physical page; entries
+    beyond the mapped prefix are ignored (clamped + length-masked). The
+    XLA fallback gathers each request's logical view first, capped at
+    ``ceil(max(lengths)/page_size)`` pages (see ``max_pages``) instead of
+    the full table width.
     """
+    assert kv_layout in ("bshd", "bhsd"), kv_layout
     if page_table is not None:
         return _flash_decode_paged(q, k_cache, v_cache, lengths, page_table,
                                    phi_q, phi_k, slopes, scale=scale,
-                                   impl=impl, block_k=block_k)
+                                   impl=impl, block_k=block_k,
+                                   kv_layout=kv_layout, max_pages=max_pages)
     b, _, h, d = q.shape
-    s_len, kvh = k_cache.shape[1], k_cache.shape[2]
+    if kv_layout == "bhsd":
+        kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    else:
+        s_len, kvh = k_cache.shape[1], k_cache.shape[2]
     dv = v_cache.shape[-1]
     scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
-    impl = _resolve_impl(impl)
+    impl = resolve_impl(impl)
 
     if impl == "io_stub":
         # deployment IO of the decode kernel: read cache + q once, write o
@@ -265,6 +444,14 @@ def flash_decode(
         eps = jnp.asarray(1e-30, jnp.float32)
         o = q[..., :1].astype(jnp.float32) * eps + dep * eps
         return jnp.broadcast_to(o, (b, 1, h, dv)).astype(q.dtype)
+
+    if kv_layout == "bhsd":
+        if impl == "xla":
+            return _xla_decode_head_major(q, k_cache, v_cache, lengths,
+                                          phi_q, phi_k, slopes, scale)
+        return _pallas_decode_hm(q, k_cache, v_cache, lengths, phi_q, phi_k,
+                                 slopes, scale, block_k,
+                                 interpret=(impl == "pallas_interpret"))
 
     if impl == "xla":
         phi_k_x = phi_k
@@ -289,7 +476,9 @@ def flash_decode(
             phi_q=phi_q, phi_k=phi_k_x, kv_length=lengths,
             impl="chunked", chunk_size=min(block_k, s_len))
 
-    # Pallas path: head-major grouped layout, padded tiles.
+    # Pallas path, canonical layout: adapt to head-major grouped layout
+    # with padded tiles — this per-call transpose is what kernel-layout
+    # caches (kv_layout="bhsd") avoid.
     g = h // kvh
     block_k = min(block_k, s_len)
     s_p = _ceil_to(s_len, block_k)
@@ -342,23 +531,130 @@ def flash_decode(
     return out
 
 
+def _pallas_decode_hm(q, k_cache, v_cache, lengths, phi_q, phi_k, slopes,
+                      scale, block_k, interpret):
+    """Kernel-layout contiguous Pallas decode: the cache IS the kernel
+    layout — q-side reshapes/pads are token-sized, and under the layout
+    contract (lane-aligned hd, block-divisible S) the cache tensors pass
+    through untouched. Off-contract shapes fall back to a correctness pad
+    (tiny test caches; never the serve engine)."""
+    b, _, h, d = q.shape
+    kvh, s_len = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // kvh
+    g_p = _ceil_to(g, 8)
+    d_p, dv_p = _ceil_to(d, _LANE), _ceil_to(dv, _LANE)
+
+    bk = _pick_block(s_len, min(block_k, s_len))
+    if bk == 0:
+        # off-contract S (no sublane-aligned divisor): pad the seq axis
+        # once to an aligned block — correctness fallback, never the
+        # serve engine (its caches satisfy the layout contract)
+        bk = _ceil_to(min(block_k, s_len), 8)
+        s_p = _ceil_to(s_len, bk)
+        k_cache = _pad_axis(k_cache, 2, s_p)
+        v_cache = _pad_axis(v_cache, 2, s_p)
+        if phi_k is not None:
+            phi_k = _pad_axis(phi_k, 2, s_p)
+    k_cache = _pad_axis(k_cache, 3, d_p)       # no-op on lane-aligned caches
+    v_cache = _pad_axis(v_cache, 3, dv_p)
+
+    def to_grouped_q(x, last_p):
+        x = x[:, 0].reshape(b, kvh, g, x.shape[-1])
+        return _pad_axis(_pad_axis(x, 2, g_p), 3, last_p)
+
+    qt = to_grouped_q(_pad_axis(q, 3, d_p), d_p)
+    pqt = pkt = None
+    if phi_q is not None:
+        r_p = _ceil_to(max(phi_q.shape[-1], phi_k.shape[-1]), _LANE)
+        pqt = to_grouped_q(_pad_axis(phi_q, 3, r_p), r_p)
+        pkt = _pad_axis(phi_k, 3, r_p)         # no-op on padded factor caches
+    slopes_g = None
+    if slopes is not None:
+        slopes_g = _pad_axis(slopes.reshape(kvh, g), 1, g_p)
+
+    out = _fd.flash_decode_fwd(
+        qt, k_cache, v_cache, lengths, pqt, pkt, slopes_g, scale=scale,
+        block_k=bk, interpret=interpret)
+    return out[:, :, :g, :dv].reshape(b, 1, h, dv)
+
+
 def _flash_decode_paged(q, k_pages, v_pages, lengths, page_table,
-                        phi_q, phi_k, slopes, *, scale, impl, block_k):
+                        phi_q, phi_k, slopes, *, scale, impl, block_k,
+                        kv_layout="bshd", max_pages=None):
     """Paged dispatch for ``flash_decode`` (see its docstring for layouts)."""
     b, _, h, d = q.shape
-    n_pages, ps, kvh = k_pages.shape[:3]
+    if kv_layout == "bhsd":
+        kvh, n_pages, ps = k_pages.shape[:3]
+    else:
+        n_pages, ps, kvh = k_pages.shape[:3]
     dv = v_pages.shape[-1]
     p_slot = page_table.shape[1]
     scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
-    impl = _resolve_impl(impl)
-    pt = jnp.clip(page_table.astype(jnp.int32), 0, n_pages - 1)
+    impl = resolve_impl(impl)
+    p_cap = _static_page_cap(lengths, ps, p_slot, max_pages)
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, n_pages - 1)[:, :p_cap]
 
-    if impl in ("xla", "io_stub"):
+    if kv_layout == "bhsd" and impl in ("xla", "io_stub"):
+        # logical views of the pool, gathered page-granular and capped at
+        # p_cap pages — Θ(longest request), not Θ(table width). Everything
+        # pool-sized stays in the gather's native (KVH, B, S, E) axis
+        # order end to end; only token-sized tensors (q, the output)
+        # transpose, so XLA never copies the view.
+        def view(pool):                           # -> (KVH, B, S_view, E)
+            return pool[:, pt].reshape(kvh, b, p_cap * ps, pool.shape[-1])
+        gk, gv = view(k_pages[..., :d]), view(v_pages[..., :dv])
+        if impl == "io_stub":
+            dep = gk.astype(jnp.float32).sum() + gv.astype(jnp.float32).sum()
+            if phi_k is not None:
+                # page axis: 0 on the shared 3-dim slab, 1 on the
+                # per-kv-head (KVH, n_pages, ps, R) form
+                gphi = phi_k[pt] if phi_k.ndim == 3 else phi_k[:, pt]
+                dep = dep + jnp.sum(gphi.astype(jnp.float32))
+            eps = jnp.asarray(1e-30, jnp.float32)
+            o = q[..., :1].astype(jnp.float32) * eps + dep * eps
+            return jnp.broadcast_to(o, (b, 1, h, dv)).astype(q.dtype)
+        g = h // kvh
+        qg = (q[:, 0].reshape(b, kvh, g, d).transpose(1, 0, 2, 3)
+              .astype(jnp.float32))               # (KVH, B, G, D): tiny
+        s = jnp.einsum("kbgd,kbsd->kbgs", qg,
+                       gk.astype(jnp.float32)) * scale
+        if phi_q is not None:
+            if phi_k.ndim == 3:                   # (n_pages, ps, r_pad) slab
+                gphi = phi_k[pt].reshape(b, p_cap * ps, phi_k.shape[-1])
+                r = min(phi_q.shape[-1], gphi.shape[-1])
+                pq = (phi_q[:, 0].reshape(b, kvh, g, -1)[..., :r]
+                      .transpose(1, 0, 2, 3))
+                s = s + jnp.einsum("kbgr,bsr->kbgs",
+                                   pq.astype(jnp.float32),
+                                   gphi[..., :r].astype(jnp.float32))
+            else:                                 # (KVH, n_pages, ps, R)
+                gphi = phi_k[:, pt].reshape(kvh, b, p_cap * ps,
+                                            phi_k.shape[-1])
+                r = min(phi_q.shape[-1], gphi.shape[-1])
+                pq = (phi_q[:, 0].reshape(b, kvh, g, -1)[..., :r]
+                      .transpose(1, 0, 2, 3))
+                s = s + jnp.einsum("kbgr,kbsr->kbgs",
+                                   pq.astype(jnp.float32),
+                                   gphi[..., :r].astype(jnp.float32))
+        k_pos = jnp.arange(p_cap * ps)
+        if slopes is not None:
+            rel = (k_pos[None] - (lengths - 1)[:, None]).astype(jnp.float32)
+            s = s + slopes.reshape(kvh, g)[:, None, :, None] \
+                * rel[None, :, None]
+        valid = k_pos[None] < lengths[:, None]
+        s = jnp.where(valid[None, :, None], s, DEFAULT_MASK_VALUE)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("kbgs,kbse->kbge", p, gv.astype(jnp.float32))
+        return (o.transpose(1, 0, 2, 3).reshape(b, 1, h, dv)
+                .astype(q.dtype))
+
+    if impl in ("xla", "io_stub"):               # canonical pools
         # gather each request's pages into its logical contiguous view and
         # reuse the contiguous path (masking past ``lengths`` is identical)
         def view(pool):
-            g = pool[pt]                          # (B, P_slot, ps, KVH, E)
-            return g.reshape(b, p_slot * ps, *pool.shape[2:])
+            gth = pool[pt]                        # (B, P_cap, ps, KVH, E)
+            return gth.reshape(b, p_cap * ps, *pool.shape[2:])
         phi_view = None
         if phi_k is not None:
             slab = phi_k if phi_k.ndim == 4 else phi_k[:, :, None, :]
@@ -367,8 +663,11 @@ def _flash_decode_paged(q, k_pages, v_pages, lengths, page_table,
                             phi_q, phi_view, slopes, scale=scale, impl=impl,
                             block_k=block_k)
 
-    # Pallas path: pools go kv-head-major, pages resolved in the kernel's
+    # Pallas path: kv-head-major pools, pages resolved in the kernel's
     # scalar-prefetch block index maps (no gather, no view materialization).
+    # Kernel layout hands the pools (and the shared phi slab) over as-is;
+    # canonical pools adapt per call (transpose + lane pad + kv-head
+    # broadcast — the legacy cost).
     g = h // kvh
     d_p, dv_p = _ceil_to(d, _LANE), _ceil_to(dv, _LANE)
     g_p = _ceil_to(g, 8)
@@ -377,25 +676,39 @@ def _flash_decode_paged(q, k_pages, v_pages, lengths, page_table,
         x = x[:, 0].reshape(b, kvh, g, x.shape[-1])
         return _pad_axis(_pad_axis(x, 2, g_p), 3, last_p)
 
-    def to_pool(x, last_p):
-        # (n_pages, ps, KVH, E) -> (KVH, n_pages, ps, E_pad)
-        return _pad_axis(x.transpose(2, 0, 1, 3), 3, last_p)
+    if kv_layout == "bhsd":
+        kt = _pad_axis(k_pages, 3, d_p)          # no-op: pools lane-padded
+        vt = _pad_axis(v_pages, 3, dv_p)
+    else:
+        def to_pool(x, last_p):
+            # (n_pages, ps, KVH, E) -> (KVH, n_pages, ps, E_pad)
+            return _pad_axis(x.transpose(2, 0, 1, 3), 3, last_p)
+        kt = to_pool(k_pages, d_p)
+        vt = to_pool(v_pages, dv_p)
 
     qt = to_grouped_q(q, d_p)
-    kt = to_pool(k_pages, d_p)
-    vt = to_pool(v_pages, dv_p)
     pqt = pkt = None
     if phi_q is not None:
         r = phi_q.shape[-1]
-        r_p = _ceil_to(r, _LANE)
         assert phi_q.shape[2] in (h, kvh), (phi_q.shape, h, kvh)
         if phi_q.shape[2] == kvh and kvh != h:    # shared within each group
             phi_q = jnp.repeat(phi_q, g, axis=2)
-        pqt = to_grouped_q(phi_q, r_p)
-        slab = phi_k if phi_k.ndim == 4 else phi_k[:, :, None, :]
-        assert slab.shape[2] in (kvh, 1), (phi_k.shape, kvh)
-        slab = jnp.broadcast_to(slab, (n_pages, ps, kvh, r))
-        pkt = to_pool(slab, r_p)
+        if kv_layout == "bhsd":
+            if phi_k.ndim == 3:                   # layer/kv-head-shared slab
+                pkt = phi_k[None]                 # (1, n_pages, ps, r_pad)
+            else:
+                pkt = phi_k                       # (KVH, n_pages, ps, r_pad)
+            r_p = _ceil_to(max(r, pkt.shape[-1]), _LANE)
+            pkt = _pad_axis(pkt, 3, r_p)          # no-op on padded slabs
+        else:
+            slab = phi_k if phi_k.ndim == 4 else phi_k[:, :, None, :]
+            assert slab.shape[2] in (kvh, 1), (phi_k.shape, kvh)
+            r_p = _ceil_to(max(r, slab.shape[-1]), _LANE)
+            # canonical slab: (n_pages, ps, KVH|1, R) -> kv-head-major; the
+            # kv-head-shared case stays a single copy (broadcast happens in
+            # the kernel's block index maps, not here)
+            pkt = _pad_axis(slab.transpose(2, 0, 1, 3), 3, r_p)
+        pqt = to_grouped_q(_pad_axis(phi_q, 3, r_p), r_p)
     slopes_g = None
     if slopes is not None:
         slopes_g = _pad_axis(slopes.reshape(kvh, g), 1, g_p)

@@ -7,8 +7,12 @@
 - ``prefill(params, batch, max_len, lengths)`` — prompt -> (logits, cache);
   ``lengths`` (B,) enables ragged right-padded prompts (logits gathered at
   each row's last valid position, state paths freeze there),
-- ``decode(params, cache, tokens)``  — one token -> (logits, cache),
-- ``init_cache(batch, max_len)``     — zeroed cache pytree,
+- ``decode(params, cache, tokens, max_pages=None)`` — one token ->
+  (logits, cache); ``max_pages`` (static) caps the pages a paged decode
+  step can reference (the serve engine derives it from host-side lengths),
+- ``init_cache(batch, max_len)``     — zeroed cache pytree (stored in the
+  kernel-native kv-head-major layout unless ``cfg.cache_layout="legacy"``
+  — see ops.py's cache layout contract),
 - ``insert_cache(dst, src, slots)``  — scatter prefilled wave rows into the
   serve engine's slot cache (out-of-range slot ids are dropped),
 - ``init_paged_cache(batch, n_pages, page_size, pages_per_slot)`` — zeroed
@@ -88,7 +92,8 @@ def _lm_model(cfg: ArchConfig) -> Model:
         loss=lambda p, batch: lm.loss_fn(p, batch, cfg),
         prefill=lambda p, batch, max_len=None, lengths=None: lm.prefill(
             p, batch, cfg, max_len=max_len, lengths=lengths),
-        decode=lambda p, cache, tokens: lm.decode_step(p, cache, tokens, cfg),
+        decode=lambda p, cache, tokens, max_pages=None: lm.decode_step(
+            p, cache, tokens, cfg, max_pages=max_pages),
         init_cache=lambda b, max_len, length=0: lm.init_cache(
             cfg, b, max_len, length=length),
         insert_cache=lm.insert_cache_at_slots,
@@ -96,8 +101,10 @@ def _lm_model(cfg: ArchConfig) -> Model:
             (lambda b, n_pages, page_size, pages_per_slot=None:
              lm.init_paged_cache(cfg, b, n_pages, page_size, pages_per_slot))
             if cfg.family in ("dense", "moe", "hybrid") else None),
-        insert_paged=(lm.insert_paged_cache_at_slots
-                      if cfg.family in ("dense", "moe", "hybrid") else None),
+        insert_paged=(
+            (lambda dst, src, slots, tables: lm.insert_paged_cache_at_slots(
+                dst, src, slots, tables, layout=cfg.cache_layout))
+            if cfg.family in ("dense", "moe", "hybrid") else None),
         grow_page_table=(lm.grow_page_tables_at_slots
                          if cfg.family in ("dense", "moe", "hybrid")
                          else None),

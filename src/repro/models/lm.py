@@ -135,14 +135,16 @@ def lm_template(cfg: ArchConfig) -> dict:
 
 def _attention(lp: dict, x: jax.Array, cfg: ArchConfig, *,
                mask_kind: str, q_offset=0) -> jax.Array:
-    """Full-sequence attention (train / prefill). Returns (y, k, v)."""
+    """Full-sequence attention (train / prefill). Returns (y, k, v).
+
+    k, v come back in the cfg's CACHE layout: kv-head-major
+    ``(B, KVH, S, hd)`` under ``cache_layout="kernel"`` (when the Pallas
+    kernel runs, the projection einsums write head-major directly and the
+    kernel consumes it zero-copy — prefill emits kernel-layout caches with
+    no post-hoc fixup), canonical ``(B, S, KVH, hd)`` under ``"legacy"``.
+    """
     dt = x.dtype
-    q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
-    k = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
-    q = constrain(q, "batch", "seq", "heads", None)
-    k = constrain(k, "batch", "seq", "kv_heads", None)
-    v = constrain(v, "batch", "seq", "kv_heads", None)
+    head_major = cfg.cache_layout == "kernel"
 
     slopes = None
     phi_q = phi_k = None
@@ -157,6 +159,34 @@ def _attention(lp: dict, x: jax.Array, cfg: ArchConfig, *,
             pad = cfg.heads_padded - cfg.n_heads
             dense_bias = jnp.pad(bd, ((0, pad), (0, 0), (0, 0)))[None]
 
+    # Compute layout follows the impl that will run: head-major projections
+    # feed the Pallas kernel zero-copy; the XLA chunked fallback (and the
+    # dense-bias baseline) speak canonical, so there the projections stay
+    # canonical and only the cache emission transposes (once per prefill —
+    # the "cheap view" the layout contract allows off the hot path).
+    hm_compute = (head_major and dense_bias is None
+                  and kops.resolve_impl(cfg.attn_impl) != "xla")
+    if hm_compute:
+        q = jnp.einsum("bsd,dhe->bhse", x, lp["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhe->bhse", x, lp["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhe->bhse", x, lp["wv"].astype(dt))
+        q = constrain(q, "batch", "heads", "seq", None)
+        k = constrain(k, "batch", "kv_heads", "seq", None)
+        v = constrain(v, "batch", "kv_heads", "seq", None)
+        o = kops.flash_attention(
+            q, k, v, phi_q, phi_k, slopes, mask_kind=mask_kind,
+            window=cfg.window, impl=cfg.attn_impl, block_q=128, block_k=128,
+            layout="bhsd")
+        y = jnp.einsum("bhse,hed->bsd", o, lp["wo"].astype(dt))
+        return constrain(y, "batch", "seq", None), k, v
+
+    q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+
     if dense_bias is not None:
         from repro.core.attention import MaskSpec, attention as core_attn
         o = core_attn(q, k, v, mask=MaskSpec(mask_kind, cfg.window),
@@ -167,12 +197,14 @@ def _attention(lp: dict, x: jax.Array, cfg: ArchConfig, *,
             q, k, v, phi_q, phi_k, slopes, mask_kind=mask_kind,
             window=cfg.window, impl=cfg.attn_impl, block_q=128, block_k=128)
     y = jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(dt))
+    if head_major:                       # cache emission only, off hot path
+        k, v = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
     return constrain(y, "batch", "seq", None), k, v
 
 
 def _attention_decode(lp: dict, x: jax.Array, k_cache, v_cache, lengths,
                       cfg: ArchConfig, *, active=None, page_table=None,
-                      phi_pages=None):
+                      phi_pages=None, max_pages=None):
     """One-token attention against a (ring / full / paged) cache.
 
     ``active`` (B,) bool freezes retired slot rows: their KV writes are
@@ -181,14 +213,27 @@ def _attention_decode(lp: dict, x: jax.Array, k_cache, v_cache, lengths,
     layout a stale page table would otherwise corrupt pages that have been
     reallocated to ANOTHER request.
 
-    Paged mode (``page_table`` given): ``k_cache``/``v_cache`` are page
-    pools ``(n_pages, page_size, KVH, hd)`` and the new token is written
-    through the slot's page table. ``phi_pages`` is the per-page ALiBi key
-    factor slab ``(n_pages, page_size, 2)``; when present the bias is
-    computed from the CACHED factors (phi mode — factors ride with k,
-    FlashBias Sec. 4.3) instead of re-materializing positions.
+    Cache layout (ISSUE 5): under ``cfg.cache_layout == "kernel"`` every
+    cache arrives in the kernels' native kv-head-major layout — contiguous
+    / ring ``(B, KVH, S, hd)``, page pools ``(KVH, n_pages, ps, hd_pad)``
+    — and is passed to ``ops.flash_decode`` ZERO-COPY (``kv_layout=
+    "bhsd"``); only the one new token's row is touched per step. The
+    ``"legacy"`` canonical layout (``(B, S, KVH, hd)`` / ``(n_pages, ps,
+    KVH, hd)``) is kept as the layout_vs_legacy A/B + parity reference and
+    pays ops' per-call adaptation.
+
+    Paged mode (``page_table`` given): the new token is written through the
+    slot's page table. ``phi_pages`` is the per-page ALiBi key factor slab
+    (layer- and kv-head-shared; lane-padded ``(n_pages, ps, r_pad)`` under
+    the kernel layout); when present the bias is computed from the CACHED
+    factors (phi mode — factors ride with k, FlashBias Sec. 4.3) instead
+    of re-materializing positions. ``max_pages`` statically caps the pages
+    any request can reference (the serve engine derives it from host-side
+    lengths).
     """
     dt = x.dtype
+    kernel_layout = cfg.cache_layout == "kernel"
+    kv_layout = "bhsd" if kernel_layout else "bshd"
     q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
     k_new = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
     v_new = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
@@ -199,17 +244,36 @@ def _attention_decode(lp: dict, x: jax.Array, k_cache, v_cache, lengths,
     def drop_if_frozen(idx, oob):
         return idx if active is None else jnp.where(active, idx, oob)
 
+    def new_row(x_new, pool_like):
+        # (B, 1, KVH, hd) -> (B, KVH, hd[_pad]): the one token-sized write
+        row = x_new[:, 0]
+        pad = pool_like.shape[-1] - row.shape[-1]
+        if pad:
+            row = jnp.pad(row, ((0, 0), (0, 0), (0, pad)))
+        return row
+
     # io_stub (dry-run accounting only): the donated cache is updated
     # IN PLACE on hardware (one row written); the functional `.at[].set`
     # would count a full cache read+write per layer in cost_analysis.
     skip_scatter = cfg.attn_impl == "io_stub"
     if page_table is not None:                     # paged full cache
-        n_pages, ps = k_cache.shape[0], k_cache.shape[1]
+        if kernel_layout:                          # (KVH, n_pages, ps, hd_p)
+            n_pages, ps = k_cache.shape[1], k_cache.shape[2]
+        else:                                      # (n_pages, ps, KVH, hd)
+            n_pages, ps = k_cache.shape[0], k_cache.shape[1]
         pos = lengths - 1
         page = drop_if_frozen(page_table[bidx, pos // ps], n_pages)
         if not skip_scatter:
-            k_cache = k_cache.at[page, pos % ps].set(k_new[:, 0], mode="drop")
-            v_cache = v_cache.at[page, pos % ps].set(v_new[:, 0], mode="drop")
+            if kernel_layout:
+                kr = new_row(k_new, k_cache).transpose(1, 0, 2)
+                vr = new_row(v_new, v_cache).transpose(1, 0, 2)
+                k_cache = k_cache.at[:, page, pos % ps].set(kr, mode="drop")
+                v_cache = v_cache.at[:, page, pos % ps].set(vr, mode="drop")
+            else:
+                k_cache = k_cache.at[page, pos % ps].set(k_new[:, 0],
+                                                         mode="drop")
+                v_cache = v_cache.at[page, pos % ps].set(v_new[:, 0],
+                                                         mode="drop")
         phi_q = phi_k = None
         if slopes is not None and phi_pages is not None:
             # same rank-2 q factor the ops ALiBi path materializes; the key
@@ -222,37 +286,80 @@ def _attention_decode(lp: dict, x: jax.Array, k_cache, v_cache, lengths,
             phi_k, slopes = phi_pages, None
         o = kops.flash_decode(q, k_cache, v_cache, lengths, phi_q=phi_q,
                               phi_k=phi_k, slopes=slopes, impl=cfg.attn_impl,
-                              block_k=cfg.attn_chunk, page_table=page_table)
-    elif cfg.window and cfg.window == k_cache.shape[1]:  # ring (sliding win)
-        sc = k_cache.shape[1]
+                              block_k=cfg.attn_chunk, page_table=page_table,
+                              kv_layout=kv_layout, max_pages=max_pages)
+        # lane-padded pools return lane-padded values; the pad rows are
+        # zero so slicing them off is exact (token-sized, not pool-sized)
+        o = o[..., :v_new.shape[-1]]
+    elif cfg.window and cfg.window == k_cache.shape[2 if kernel_layout
+                                                    else 1]:  # ring (SWA)
+        sc = cfg.window
         slot = drop_if_frozen((lengths - 1) % sc, sc)
         if not skip_scatter:
-            k_cache = k_cache.at[bidx, slot].set(k_new[:, 0], mode="drop")
-            v_cache = v_cache.at[bidx, slot].set(v_new[:, 0], mode="drop")
-        o = _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg)
+            if kernel_layout:
+                k_cache = k_cache.at[bidx, :, slot].set(k_new[:, 0],
+                                                        mode="drop")
+                v_cache = v_cache.at[bidx, :, slot].set(v_new[:, 0],
+                                                        mode="drop")
+            else:
+                k_cache = k_cache.at[bidx, slot].set(k_new[:, 0], mode="drop")
+                v_cache = v_cache.at[bidx, slot].set(v_new[:, 0], mode="drop")
+        o = _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg,
+                                   head_major=kernel_layout)
     else:                                          # contiguous full cache
-        sc = k_cache.shape[1]
+        sc = k_cache.shape[2 if kernel_layout else 1]
         pos = drop_if_frozen(lengths - 1, sc)
         if not skip_scatter:
-            k_cache = k_cache.at[bidx, pos].set(k_new[:, 0], mode="drop")
-            v_cache = v_cache.at[bidx, pos].set(v_new[:, 0], mode="drop")
+            if kernel_layout:
+                k_cache = k_cache.at[bidx, :, pos].set(
+                    new_row(k_new, k_cache), mode="drop")
+                v_cache = v_cache.at[bidx, :, pos].set(
+                    new_row(v_new, v_cache), mode="drop")
+            else:
+                k_cache = k_cache.at[bidx, pos].set(k_new[:, 0], mode="drop")
+                v_cache = v_cache.at[bidx, pos].set(v_new[:, 0], mode="drop")
         o = kops.flash_decode(q, k_cache, v_cache, lengths, slopes=slopes,
-                              impl=cfg.attn_impl, block_k=cfg.attn_chunk)
+                              impl=cfg.attn_impl, block_k=cfg.attn_chunk,
+                              kv_layout=kv_layout)
+        o = o[..., :v_new.shape[-1]]     # lane-padded caches return padded
     y = jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(dt))
     return y, k_cache, v_cache
 
 
-def _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg):
+def _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg, *,
+                           head_major=False):
     """Dense decode over a ring cache of size window (small: <= few K).
 
     Slot s holds absolute position p = len-1 - ((len-1 - s) mod W), valid
     iff p >= 0. ALiBi bias from absolute positions; softmax over the window.
+
+    ``head_major``: the ring cache is kernel-layout ``(B, KVH, W, hd)`` —
+    grouped einsums consume it directly (no G-fold ``jnp.repeat`` of the
+    window, no transpose).
     """
     b, _, h, e = q.shape
+    scale = 1.0 / np.sqrt(e)
+    if head_major:
+        kvh, w = k_cache.shape[1], k_cache.shape[2]
+        g = h // kvh
+        slot = jnp.arange(w)
+        last = (lengths - 1)[:, None]
+        pos = last - ((last - slot) % w)                 # (B, W)
+        valid = pos >= 0
+        qg = q[:, 0].reshape(b, kvh, g, e).astype(jnp.float32)
+        s = jnp.einsum("bkge,bkwe->bkgw", qg,
+                       k_cache.astype(jnp.float32)) * scale
+        if slopes is not None:
+            rel = (pos - last).astype(jnp.float32)       # <= 0
+            s = s + slopes.reshape(kvh, g)[None, :, :, None] \
+                * rel[:, None, None, :]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgw,bkwe->bkge", p, v_cache.astype(jnp.float32))
+        return o.reshape(b, 1, h, e).astype(q.dtype)
     w = k_cache.shape[1]
     kvh = k_cache.shape[2]
     g = h // kvh
-    scale = 1.0 / np.sqrt(e)
     slot = jnp.arange(w)
     last = (lengths - 1)[:, None]
     pos = last - ((last - slot) % w)                     # (B, W)
@@ -503,7 +610,7 @@ def _layer_prefill(lp: dict, x: jax.Array, cfg: ArchConfig, lengths=None):
 
 def _layer_decode(lp: dict, cache_l: dict, x: jax.Array, lengths,
                   cfg: ArchConfig, *, active=None, page_table=None,
-                  phi_pages=None):
+                  phi_pages=None, max_pages=None):
     new_cache = dict(cache_l)
     h = rmsnorm(x, lp["ln1"])
     if cfg.family in ("dense", "moe", "hybrid"):
@@ -512,7 +619,7 @@ def _layer_decode(lp: dict, cache_l: dict, x: jax.Array, lengths,
         y, kc, vc = _attention_decode(
             lp["attn"], h, cache_l[kk], cache_l[vv], lengths, cfg,
             active=active, page_table=page_table if paged else None,
-            phi_pages=phi_pages if paged else None)
+            phi_pages=phi_pages if paged else None, max_pages=max_pages)
         new_cache[kk], new_cache[vv] = kc, vc
     if cfg.family in ("ssm", "hybrid"):
         ys, hs, tx, tbc = _ssm_decode(lp["ssm"], h, cache_l["ssm_h"],
@@ -664,11 +771,20 @@ def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None,
     cache = {"length": lens}
     if "k" in caches:
         sc = cfg.window if (cfg.window and cfg.window < max_len) else max_len
-        k, v = caches["k"], caches["v"]          # (L,B,S,KV,hd)
+        # k/v ride in the cfg's cache layout straight out of _attention:
+        # kernel (L,B,KVH,S,hd) — seq axis 3; legacy (L,B,S,KVH,hd) — axis 2
+        kernel = cfg.cache_layout == "kernel"
+        ring = bool(cfg.window) and cfg.window < max_len
+        seq_ax = 3 if kernel else 2
+        k, v = caches["k"], caches["v"]
         if sc >= total:
-            pad = sc - total
-            cache["k"] = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-            cache["v"] = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            # full caches AND ring caches whose prompt fits the window
+            pad = [(0, 0)] * 5
+            pad[seq_ax] = (0, sc - total)
+            if kernel:   # match init_cache's once-at-allocation lane pad
+                pad[4] = (0, _contig_hd_alloc(cfg, ring) - k.shape[-1])
+            cache["k"] = jnp.pad(k, pad)
+            cache["v"] = jnp.pad(v, pad)
         else:
             # ring invariant: slot s holds the last position p < len with
             # p ≡ s (mod window); slots with no such p >= 0 are junk the
@@ -676,16 +792,19 @@ def prefill(params, batch, cfg: ArchConfig, *, max_len: Optional[int] = None,
             slot = jnp.arange(sc)
             last_pos = (lens - 1)[:, None]                     # (B, 1)
             pos = last_pos - ((last_pos - slot[None, :]) % sc)  # (B, sc)
-            idx = jnp.clip(pos, 0, total - 1)[None, :, :, None, None]
-            cache["k"] = jnp.take_along_axis(k, idx, axis=2)
-            cache["v"] = jnp.take_along_axis(v, idx, axis=2)
+            idx = jnp.clip(pos, 0, total - 1)
+            shape = [1, b, 1, 1, 1]
+            shape[seq_ax] = sc
+            idx = idx.reshape(shape)
+            cache["k"] = jnp.take_along_axis(k, idx, axis=seq_ax)
+            cache["v"] = jnp.take_along_axis(v, idx, axis=seq_ax)
     for key in ("ssm_h", "conv_x", "conv_bc"):
         if key in caches:
             cache[key] = caches[key]
     return logits, cache
 
 
-def decode_step(params, cache, tokens, cfg: ArchConfig):
+def decode_step(params, cache, tokens, cfg: ArchConfig, *, max_pages=None):
     """One decode step. tokens: (B, 1) — appended at position cache.length.
 
     Rows with ``cache["length"] == 0`` are INACTIVE (a freed serve slot, or
@@ -693,6 +812,12 @@ def decode_step(params, cache, tokens, cfg: ArchConfig):
     advance. Prefill always leaves length >= 1, so length-0 is an exact
     idle marker — the serve engine zeroes a slot's length at retire and
     this mask keeps the lane inert until the slot is reused.
+
+    ``max_pages`` (static) caps the pages any request can reference this
+    step (paged caches only) — the serve engine passes a power-of-two
+    rounding of its host-side longest live length, which bounds the paged
+    XLA fallback's gather at Θ(longest request) instead of the full
+    page-table width.
     """
     active = cache["length"] > 0
     lengths = cache["length"] + active.astype(jnp.int32)
@@ -707,14 +832,18 @@ def decode_step(params, cache, tokens, cfg: ArchConfig):
     new_cache = dict(cache)
     if paged and "pages_phi" in cache:
         # the key factor row for the new position is layer-independent —
-        # write it once, outside the layer scan (frozen rows drop)
+        # write it once, outside the layer scan (frozen rows drop). The
+        # kernel-layout slab is lane-padded: pad the row to match (the
+        # trailing zeros are inert in the factor dot).
         phi_pages = cache["pages_phi"]
-        n_pages, ps = phi_pages.shape[0], phi_pages.shape[1]
+        n_pages, ps, r_slab = phi_pages.shape
         pos = lengths - 1
         page = page_table[jnp.arange(pos.shape[0]), pos // ps]
         page = jnp.where(active, page, n_pages)
         row = jnp.stack([jnp.ones_like(pos, jnp.float32),
                          pos.astype(jnp.float32)], axis=-1)
+        if r_slab > 2:
+            row = jnp.pad(row, ((0, 0), (0, r_slab - 2)))
         phi_pages = phi_pages.at[page, pos % ps].set(row, mode="drop")
         new_cache["pages_phi"] = phi_pages
     else:
@@ -723,7 +852,8 @@ def decode_step(params, cache, tokens, cfg: ArchConfig):
     def body(x, inp):
         lp, cl = inp
         x, ncl = _layer_decode(lp, cl, x, lengths, cfg, active=active,
-                               page_table=page_table, phi_pages=phi_pages)
+                               page_table=page_table, phi_pages=phi_pages,
+                               max_pages=max_pages)
         return x, ncl
 
     x, new_layer_cache = jax.lax.scan(body, x,
@@ -737,17 +867,45 @@ def decode_step(params, cache, tokens, cfg: ArchConfig):
     return logits, new_cache
 
 
+def _contig_hd_alloc(cfg: ArchConfig, ring: bool) -> int:
+    """Stored head dim of a kernel-layout contiguous cache: 128-lane-padded
+    when the Pallas kernel will consume it (pad once at allocation, never
+    per step), raw ``hd`` for ring caches (dense XLA window path) and XLA
+    backends (head-major einsums read unpadded pools directly)."""
+    hd = cfg.resolved_head_dim
+    if ring or not kops.resolve_impl(cfg.attn_impl).startswith("pallas"):
+        return hd
+    return -(-hd // 128) * 128
+
+
 def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
                length: int = 0) -> dict:
-    """Empty cache pytree (zeros) for decode-only dry-runs and serving."""
+    """Empty cache pytree (zeros) for decode-only dry-runs and serving.
+
+    Layout follows ``cfg.cache_layout``: kernel-native kv-head-major
+    ``(L, B, KVH, S, hd[_pad])`` (the flash-decode kernel reads it
+    zero-copy — see ops.py's layout contract; like the paged pools, the
+    head dim is 128-lane-padded HERE, ONCE, when a Pallas impl will run
+    and the cache is full-KV — a non-aligned hd like stablelm's 160 would
+    otherwise be re-padded every decode step, the exact Θ(pool) cost this
+    layout deletes; ring caches feed the dense XLA window path and stay
+    unpadded) or legacy canonical ``(L, B, S, KVH, hd)`` (the A/B +
+    parity reference).
+    """
     dt = jnp.dtype(cfg.dtype)
     l = cfg.n_layers
     cache = {"length": jnp.full((batch,), length, jnp.int32)}
     if cfg.family in ("dense", "moe", "hybrid"):
-        sc = cfg.window if (cfg.window and cfg.window < max_len) else max_len
+        ring = bool(cfg.window) and cfg.window < max_len
+        sc = cfg.window if ring else max_len
         kvp, hd = cfg.kv_heads_padded, cfg.resolved_head_dim
-        cache["k"] = jnp.zeros((l, batch, sc, kvp, hd), dt)
-        cache["v"] = jnp.zeros((l, batch, sc, kvp, hd), dt)
+        if cfg.cache_layout == "kernel":
+            hd_alloc = _contig_hd_alloc(cfg, ring)
+            cache["k"] = jnp.zeros((l, batch, kvp, sc, hd_alloc), dt)
+            cache["v"] = jnp.zeros((l, batch, kvp, sc, hd_alloc), dt)
+        else:
+            cache["k"] = jnp.zeros((l, batch, sc, kvp, hd), dt)
+            cache["v"] = jnp.zeros((l, batch, sc, kvp, hd), dt)
     if cfg.family in ("ssm", "hybrid"):
         hs, p, n = cfg.ssm_heads_padded, cfg.ssm_head_dim, cfg.ssm_state
         w = cfg.conv_width
@@ -771,20 +929,42 @@ def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
     Ring-KV (sliding window) and SSM state are constant-size per slot and
     stay on the slot-contiguous discipline; SSM leaves of a hybrid arch
     ride along unchanged.
+
+    Under ``cfg.cache_layout == "kernel"`` the pools are born in the
+    flash-decode kernel's native layout — kv-head-major ``(L, KVH,
+    n_pages, ps, hd[_pad])`` — and the slab stays layer- and kv-head-
+    shared (the kv-head broadcast lives in the kernel's block index maps).
+    The decode step then hands every pool to the kernel zero-copy. The
+    128-lane pad on the trailing dim exists purely for the Pallas TPU
+    tiles, so it is applied HERE, ONCE, and only when a Pallas impl will
+    actually run (``resolve_impl``); the XLA fallback keeps unpadded pools
+    and would otherwise gather real padding bytes every step. ``"legacy"``
+    keeps the canonical ``(L, n_pages, ps, KVH, hd)`` pools + ``(n_pages,
+    ps, 2)`` slab that ops re-lays-out per step (the layout_vs_legacy A/B
+    baseline).
     """
     assert cfg.family in ("dense", "moe", "hybrid"), cfg.family
     dt = jnp.dtype(cfg.dtype)
     l = cfg.n_layers
     kvp, hd = cfg.kv_heads_padded, cfg.resolved_head_dim
     pps = pages_per_slot or n_pages
+    kernel = cfg.cache_layout == "kernel"
+    pallas = kops.resolve_impl(cfg.attn_impl).startswith("pallas")
+    if kernel:
+        hd_pad = (-(-hd // 128) * 128) if pallas else hd
+        pool_shape = (l, kvp, n_pages, page_size, hd_pad)
+    else:
+        pool_shape = (l, n_pages, page_size, kvp, hd)
     cache = {
         "length": jnp.zeros((batch,), jnp.int32),
-        "pages_k": jnp.zeros((l, n_pages, page_size, kvp, hd), dt),
-        "pages_v": jnp.zeros((l, n_pages, page_size, kvp, hd), dt),
+        "pages_k": jnp.zeros(pool_shape, dt),
+        "pages_v": jnp.zeros(pool_shape, dt),
         "page_table": jnp.zeros((batch, pps), jnp.int32),
     }
     if cfg.bias_kind == "alibi":
-        cache["pages_phi"] = jnp.zeros((n_pages, page_size, 2), jnp.float32)
+        r_slab = 128 if (kernel and pallas) else 2
+        cache["pages_phi"] = jnp.zeros((n_pages, page_size, r_slab),
+                                       jnp.float32)
     if cfg.family == "hybrid":
         hs, p, n = cfg.ssm_heads_padded, cfg.ssm_head_dim, cfg.ssm_state
         w = cfg.conv_width
@@ -794,24 +974,34 @@ def init_paged_cache(cfg: ArchConfig, batch: int, n_pages: int,
     return cache
 
 
-def insert_paged_cache_at_slots(dst: dict, src: dict, slots, tables) -> dict:
+def insert_paged_cache_at_slots(dst: dict, src: dict, slots, tables, *,
+                                layout: str = "kernel") -> dict:
     """Scatter a prefilled wave into the paged cache, whole pages at a time.
 
     ``src`` is a contiguous wave cache from ``prefill`` whose sequence
-    length S is a page multiple. ``tables`` (W, pages_per_slot) int32 holds
-    each wave row's full page-table row — the pages covering its prompt
-    first, then any pages reserved for decode growth; unused entries carry
-    an out-of-range id (>= n_pages) and the corresponding page writes are
-    DROPPED, exactly like out-of-range ``slots`` drop whole rows. Prompt
-    pages scatter K/V content and position factors into the pool; the page
-    table and per-slot ``length`` scatter at ``slots``; SSM leaves (hybrid)
-    ride the slot path of ``insert_cache_at_slots``.
+    length S is a page multiple, in the same ``layout`` the pool uses
+    (prefill emits it that way — kernel-layout pages scatter into the
+    kernel-layout pool DIRECTLY, there is no post-hoc fixup pass).
+    ``tables`` (W, pages_per_slot) int32 holds each wave row's full
+    page-table row — the pages covering its prompt first, then any pages
+    reserved for decode growth; unused entries carry an out-of-range id
+    (>= n_pages) and the corresponding page writes are DROPPED, exactly
+    like out-of-range ``slots`` drop whole rows. Prompt pages scatter K/V
+    content and position factors into the pool; the page table and
+    per-slot ``length`` scatter at ``slots``; SSM leaves (hybrid) ride the
+    slot path of ``insert_cache_at_slots``.
     """
+    assert layout in ("kernel", "legacy"), layout
     slots = jnp.asarray(slots, jnp.int32)
     tables = jnp.asarray(tables, jnp.int32)
-    n_pages, ps = dst["pages_k"].shape[1], dst["pages_k"].shape[2]
+    kernel = layout == "kernel"
+    if kernel:          # pool (L, KVH, n_pages, ps, hd_pad); src (L,W,KVH,S,hd)
+        n_pages, ps = dst["pages_k"].shape[2], dst["pages_k"].shape[3]
+        s = src["k"].shape[3]
+    else:               # pool (L, n_pages, ps, KVH, hd); src (L, W, S, KVH, hd)
+        n_pages, ps = dst["pages_k"].shape[1], dst["pages_k"].shape[2]
+        s = src["k"].shape[2]
     w = tables.shape[0]
-    s = src["k"].shape[2]
     assert s % ps == 0, (s, ps)
     p_w = s // ps
     if tables.shape[1] >= p_w:
@@ -823,16 +1013,32 @@ def insert_paged_cache_at_slots(dst: dict, src: dict, slots, tables) -> dict:
 
     out = dict(dst)
     for key, pool_key in (("k", "pages_k"), ("v", "pages_v")):
-        kv = src[key]                                     # (L, W, S, KVH, hd)
+        kv = src[key]
         l = kv.shape[0]
-        pages = kv.reshape(l, w * p_w, ps, *kv.shape[3:])
-        out[pool_key] = dst[pool_key].at[:, flat_ids].set(pages, mode="drop")
+        if kernel:
+            kvh, hd = kv.shape[2], kv.shape[4]
+            pages = kv.reshape(l, w, kvh, p_w, ps, hd)
+            pages = pages.transpose(0, 2, 1, 3, 4, 5)
+            pages = pages.reshape(l, kvh, w * p_w, ps, hd)
+            hd_pad = dst[pool_key].shape[-1]
+            if hd_pad != hd:              # pool is lane-padded at init
+                pages = jnp.pad(pages, ((0, 0),) * 4 + ((0, hd_pad - hd),))
+            out[pool_key] = dst[pool_key].at[:, :, flat_ids].set(
+                pages, mode="drop")
+        else:
+            pages = kv.reshape(l, w * p_w, ps, *kv.shape[3:])
+            out[pool_key] = dst[pool_key].at[:, flat_ids].set(pages,
+                                                              mode="drop")
     if "pages_phi" in dst:
+        r_slab = dst["pages_phi"].shape[-1]
         pos = jnp.arange(s, dtype=jnp.float32)
         rows = jnp.stack([jnp.ones_like(pos), pos], -1)   # (S, 2): [1, pos]
-        rows = jnp.broadcast_to(rows.reshape(1, p_w, ps, 2), (w, p_w, ps, 2))
+        if r_slab > 2:                    # lane-padded slab (kernel layout)
+            rows = jnp.pad(rows, ((0, 0), (0, r_slab - 2)))
+        rows = jnp.broadcast_to(rows.reshape(1, p_w, ps, r_slab),
+                                (w, p_w, ps, r_slab))
         out["pages_phi"] = dst["pages_phi"].at[flat_ids].set(
-            rows.reshape(w * p_w, ps, 2), mode="drop")
+            rows.reshape(w * p_w, ps, r_slab), mode="drop")
     out["page_table"] = dst["page_table"].at[slots].set(tables, mode="drop")
     out["length"] = dst["length"].at[slots].set(src["length"], mode="drop")
     for key in ("ssm_h", "conv_x", "conv_bc"):

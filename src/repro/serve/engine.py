@@ -19,12 +19,14 @@ per-request, so a request's output is identical whether it runs alone or
 packed with strangers — provided ``prefill_len`` is pinned (the padded
 prompt length is the one shape that changes with wave composition).
 
-Cache kinds (all pytrees, all jit-traceable):
+Cache kinds (all pytrees, all jit-traceable; stored in the flash-decode
+kernels' kv-head-major layout since ISSUE 5 — the decode step hands them
+to the kernels zero-copy, see serve/README.md §Cache layout contract):
 
-- full KV            (dense/moe archs)        — (L, B, S_max, KV, hd),
-- paged KV           (full-KV + ``page_size``) — shared (L, n_pages, ps,
-  KV, hd) pool + per-page phi_k factor slab + per-slot page tables,
-- ring KV            (sliding-window archs)   — (L, B, window, KV, hd),
+- full KV            (dense/moe archs)        — (L, B, KV, S_max, hd),
+- paged KV           (full-KV + ``page_size``) — shared (L, KV, n_pages,
+  ps, hd) pool + per-page phi_k factor slab + per-slot page tables,
+- ring KV            (sliding-window archs)   — (L, B, KV, window, hd),
 - SSM state + conv   (ssm/hybrid archs)       — constant size.
 
 Paged mode (pass ``page_size``) replaces the per-slot ``max_len`` segment
@@ -163,7 +165,12 @@ class ServeEngine:
             return model.prefill(p, batch, max_len=max_len, lengths=lengths)
 
         self._prefill = jax.jit(_pf, static_argnames=("max_len",))
-        self._decode = jax.jit(model.decode)
+        # max_pages is a STATIC cap on the pages a paged decode step may
+        # reference: the engine passes a power-of-two rounding of its
+        # host-mirrored longest live length, so the paged XLA fallback
+        # gathers Θ(longest request) instead of the full page-table width
+        # while recompiling at most log2(pages_per_slot) times.
+        self._decode = jax.jit(model.decode, static_argnames=("max_pages",))
         self._insert = jax.jit(model.insert_cache)
         if self._paged:
             self._insert_paged = jax.jit(model.insert_paged)
@@ -250,6 +257,20 @@ class ServeEngine:
         self._ensure_state()
         while self._live or len(self.scheduler):
             self.step()
+
+    def _page_cap(self) -> Optional[int]:
+        """Static page bound for this decode step: pow2-rounded pages of
+        the longest live length (+1 for the position being written), so
+        the jitted step recompiles only when a length crosses a doubling
+        boundary. None for unpaged engines."""
+        if not self._paged:
+            return None
+        longest = max((st.length for st in self._live.values()), default=0)
+        need = max(1, -(-(longest + 1) // self.page_size))
+        cap = 1
+        while cap < need:
+            cap *= 2
+        return min(cap, self.pages_per_slot)
 
     def _pages_needed(self, req: Request) -> int:
         """Pages a request can ever touch: its final cache length is
@@ -385,7 +406,8 @@ class ServeEngine:
         if not self._live:
             return []
         logits, self._cache = self._decode(self.params, self._cache,
-                                           self._last_tok)
+                                           self._last_tok,
+                                           max_pages=self._page_cap())
         for st in self._live.values():
             st.length += 1
         mask = np.zeros((self.n_slots,), bool)

@@ -6,7 +6,11 @@ FlashBias Sec. 4.3 makes the KV cache the natural home of (the rank-R key
 factors "ride with k", keeping bias storage at Theta(N R), Thm 3.2). This
 module is the HOST side: a free-list allocator plus per-request accounting.
 The device side (pool arrays + page tables) lives in ``models/lm.py`` and
-the paged flash-decode path in ``kernels/``.
+the paged flash-decode path in ``kernels/``. Page ids are layout-agnostic:
+since ISSUE 5 the device pools are stored kv-head-major (``(L, KVH,
+n_pages, ps, hd)``, the kernels' native layout — serve/README.md §Cache
+layout contract), but a page is still one ``page_size``-token claim on
+every paged leaf, so the accounting here is unchanged by the layout.
 
 Allocation is LAZY by default (ISSUE 4): admission reserves only the pages
 covering a request's *prompt*, and the engine ``grow``s the request by one

@@ -22,10 +22,14 @@ def _write(path, payload):
 
 
 def _healthy_kernels(speedup=1.0):
-    return {"dense_vs_factored": {"speedup": speedup, "seq_len": 128}}
+    return {"dense_vs_factored": {"speedup": speedup, "seq_len": 512},
+            "dense_vs_factored_sweep": [
+                {"speedup": 0.8, "seq_len": 128},
+                {"speedup": speedup, "seq_len": 512},
+            ]}
 
 
-def _healthy_serve(decode=2000.0, ratio=1.0):
+def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0):
     return {
         "points": [
             {"occupancy": 1, "decode_tokens_per_s": decode / 2,
@@ -34,6 +38,7 @@ def _healthy_serve(decode=2000.0, ratio=1.0):
              "prefill_tokens_per_s": 1.0},
         ],
         "lazy_vs_whole": {"occupancy": 4, "ratio": ratio},
+        "layout_vs_legacy": {"occupancy": 4, "ratio": layout_ratio},
     }
 
 
@@ -79,6 +84,34 @@ def test_regressed_lazy_ratio_fails(files):
     tmp, bdir, kernels, _ = files
     bad = _write(tmp / "bad_r.json", _healthy_serve(ratio=0.5))
     assert _run(bdir, kernels, bad) == 1
+
+
+def test_regressed_layout_ratio_fails(files):
+    """ISSUE 5 gate: a kernel-layout decode path slower than the legacy
+    transpose-per-step path (ratio < 1 - tolerance) must fail CI."""
+    tmp, bdir, kernels, _ = files
+    bad = _write(tmp / "bad_l.json", _healthy_serve(layout_ratio=0.5))
+    assert _run(bdir, kernels, bad) == 1
+    # inside the band passes (noise-tolerant, same as the lazy gate)
+    near = _write(tmp / "near_l.json", _healthy_serve(layout_ratio=0.85))
+    assert _run(bdir, kernels, near) == 0
+    assert _run(bdir, kernels, near, "--tolerance", "0.05") == 1
+
+
+def test_headline_is_sweep_point_not_small_n():
+    """The gated kernels headline must be the paper-scale sweep point —
+    a small-N artifact (where factored legitimately loses) would weaken
+    the gate to meaninglessness. Runs bench_kernels' actual
+    headline-selection logic on a sweep whose small-N point both LEADS
+    the list and has the bigger speedup, so any regression to
+    first/last/best-point selection is caught."""
+    from benchmarks.bench_kernels import headline_point
+    sweep = [
+        {"seq_len": 128, "speedup": 2.0},     # small-N decoy, listed first
+        {"seq_len": 2048, "speedup": 1.1},    # paper scale: the headline
+        {"seq_len": 512, "speedup": 1.5},
+    ]
+    assert headline_point(sweep) == sweep[1]
 
 
 def test_tolerance_flag_widens_band(files):

@@ -62,7 +62,9 @@ def test_hymba_ring_cache_beyond_window():
     t = cfg.window + 8
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, t + 1), 0, cfg.vocab)
     _, cache = model.prefill(params, {"tokens": toks[:, :t]}, max_len=t + 4)
-    assert cache["k"].shape[2] == cfg.window            # ring, not full
+    assert cache["k"].shape[3] == cfg.window            # ring, not full
+    # kernel cache layout (ISSUE 5): (L, B, KVH, window, hd)
+    assert cache["k"].shape[2] == cfg.kv_heads_padded
     lg, _ = model.decode(params, cache, toks[:, t:t + 1])
     lg_ref, _ = model.prefill(params, {"tokens": toks}, max_len=t + 5)
     np.testing.assert_allclose(lg, lg_ref, atol=3e-3)
