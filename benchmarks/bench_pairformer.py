@@ -1,0 +1,151 @@
+"""Batched Pairformer serve benchmark: factored vs dense bias caches.
+
+The paper's Sec. 4.4 serving claim, measured through the serve engine's
+``PairBatchBackend``: admission runs the trunk once per complex and caches
+its per-layer pair-bias state per slot; every step is one refinement
+iteration of single-rep attention over the full slot batch. Three cache
+representations serve the identical workload with interleaved timed steps
+(same load profile, min-estimator: bench_serve's A/B methodology):
+
+- ``factored`` — rank-R SVD factors phi_q/phi_k (FlashBias Sec. 4.3),
+  Theta((N+M)R) bias bytes per step;
+- ``dense`` (``bias_mode="dense_recompute"``) — the OFFICIAL dataflow and
+  the paper's Table 6 baseline: the per-layer pair rep z is cached and the
+  bias is re-projected from it at every use, exactly as AF3's pair-bias
+  attention computes it;
+- ``cached_bias`` (``bias_mode="dense"``) — the strongest dense variant:
+  the projected (H, N, N) bias itself cached at admission, steps only
+  stream it. Stronger than anything the official implementation does, kept
+  as an ungated diagnostic.
+
+The gated headline (``factored_vs_dense`` — scripts/check_bench.py holds
+its LARGEST-n_res ratio >= 1.0 within tolerance) is factored vs the
+official dataflow, the paper's actual A/B. ``cached_ratio`` is gated
+separately against a committed conservative baseline as a factored-path
+regression tripwire (e.g. a silent dense materialization).
+
+CPU container caveat (benchmarks/common.py): on an accelerator the
+factored path also beats the CACHED dense bias at paper scale (the rank-R
+logit term is MXU compute, the N^2 bias stream is HBM bandwidth — see
+EXPERIMENTS.md §Roofline); on CPU, matmul throughput is the scarce
+resource, so ``cached_ratio`` sits below 1.0 in the compute-bound tail.
+The sweep ends at n_res=384, the AF3 training-crop scale.
+
+    PYTHONPATH=src python -m benchmarks.bench_pairformer [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+
+DEFAULT_OUT = "BENCH_pairformer.json"
+
+
+def _timed_step(engine) -> float:
+    """One engine step, blocked on the updated single-rep cache (the pair
+    step emits nothing host-side, so without the block the loop would time
+    async dispatch instead of compute)."""
+    t0 = time.monotonic()
+    engine.decode()
+    jax.block_until_ready(engine.backend._cache["s"])
+    return time.monotonic() - t0
+
+
+def compare_point(models: dict, params, n_res: int, n_slots: int,
+                  steps: int) -> dict:
+    """Interleaved refinement-step A/B at one n_res across the three cache
+    representations. All engines admit the identical wave of full-length
+    complexes (the A/B measures the bias-cache representation, not
+    masking). Ratios > 1 mean the factored cache steps faster.
+    """
+    from repro.serve import ServeEngine
+
+    rng = np.random.default_rng(0)
+    complexes = [rng.standard_normal((n_res, 64)).astype(np.float32)
+                 for _ in range(n_slots)]
+    engines = {mode: ServeEngine(m, params, max_len=n_res, n_slots=n_slots)
+               for mode, m in models.items()}
+    best = {}
+    for mode, eng in engines.items():
+        for c in complexes:
+            eng.submit(c, steps + 4)
+        eng.admit()
+        _timed_step(eng)                      # compile + first step
+        _timed_step(eng)
+        best[mode] = float("inf")
+    for _ in range(steps):                    # interleave: same load profile
+        for mode, eng in engines.items():
+            best[mode] = min(best[mode], _timed_step(eng))
+    for eng in engines.values():
+        eng.run()
+    return {"n_res": n_res,
+            "factored_step_ms": best["factored"] * 1e3,
+            "dense_step_ms": best["dense"] * 1e3,
+            "cached_bias_step_ms": best["cached_bias"] * 1e3,
+            "ratio": best["dense"] / best["factored"],
+            "cached_ratio": best["cached_bias"] / best["factored"]}
+
+
+def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
+    """benchmarks/run.py entry: emit BENCH_pairformer.json + CSV rows."""
+    from repro.configs.pairformer_lite import CONFIG
+    from repro.models import get_model
+    from repro.models.common import init_params
+
+    sizes = (48, 96) if smoke else (128, 256, 384)
+    n_slots, n_layers = 2, 2
+    steps = 4 if smoke else 6
+    # paper config at reduced depth (the A/B scales linearly in layers),
+    # f32 so all paths run the same CPU dtype path; rank = App. H's R=96
+    cfg_f = CONFIG.replace(n_layers=n_layers, dtype="float32", remat="none")
+    models = {"factored": get_model(cfg_f),
+              "dense": get_model(cfg_f.replace(
+                  bias_mode="dense_recompute")),
+              "cached_bias": get_model(cfg_f.replace(bias_mode="dense"))}
+    params = init_params(models["factored"].template(), jax.random.PRNGKey(0))
+
+    data = {"arch": cfg_f.name, "mode": "svd", "rank": cfg_f.bias_rank,
+            "n_slots": n_slots, "n_layers": n_layers,
+            "refine_steps": steps, "points": []}
+    for n in sizes:
+        data["points"].append(compare_point(models, params, n, n_slots,
+                                            steps))
+    # headline: the LARGEST n_res of the sweep (AF3 crop scale in the full
+    # run) — gated >= 1.0 within tolerance by scripts/check_bench.py
+    data["factored_vs_dense"] = dict(data["points"][-1])
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    rows = []
+    for p in data["points"]:
+        rows.append(Row(f"pairformer_step_factored_n{p['n_res']}",
+                        p["factored_step_ms"] * 1e3,
+                        f"R={data['rank']} svd"))
+        rows.append(Row(f"pairformer_step_dense_n{p['n_res']}",
+                        p["dense_step_ms"] * 1e3,
+                        f"official recompute; ratio={p['ratio']:.3f}"))
+        rows.append(Row(f"pairformer_step_cachedbias_n{p['n_res']}",
+                        p["cached_bias_step_ms"] * 1e3,
+                        f"cached_ratio={p['cached_ratio']:.3f}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    rows = run(out_path=args.out, smoke=args.smoke)
+    for r in rows:
+        print(r.csv())
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

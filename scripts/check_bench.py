@@ -22,6 +22,21 @@ than ``--tolerance`` (default 30%) below its committed baseline:
    (ISSUE 5) must be at least as fast as the legacy canonical layout it
    replaced (>= 1.0 within tolerance). Interleaved like the lazy A/B, so
    no baseline is needed.
+5. neural (``--neural``, opt-in): the Table 6 Pairformer inference A/B
+   from BENCH_neural.json — dense-path time / FlashBias-neural-path time,
+   a same-machine ratio gated against a committed conservative baseline
+   (the neural path ran ungated since the bench landed, so a factor-MLP
+   regression would have merged silently).
+6. pairformer (``--pairformer``, opt-in): the ISSUE 6 batched-serve A/B
+   from BENCH_pairformer.json. Two gates: the headline
+   ``factored_vs_dense.ratio`` (factored factor-cache step vs the official
+   recompute-from-z dataflow, interleaved, >= 1.0 within tolerance — the
+   paper's Sec. 4.4 claim) and ``cached_ratio`` (factored vs the cached
+   dense-bias variant) against a committed baseline as a factored-path
+   regression tripwire.
+
+The opt-in gates only run when their flag is passed (CI passes them
+explicitly); default invocations keep the original four gates.
 
 Note on the kernels headline: ``dense_vs_factored`` is the LARGEST point
 of the seq-length sweep (``dense_vs_factored_sweep``) — the paper-scale
@@ -52,6 +67,8 @@ import sys
 DEFAULT_BASELINE_DIR = os.path.join("benchmarks", "baselines")
 KERNELS_BASELINE = "BENCH_kernels.baseline.json"
 SERVE_BASELINE = "BENCH_serve.baseline.json"
+NEURAL_BASELINE = "BENCH_neural.baseline.json"
+PAIRFORMER_BASELINE = "BENCH_pairformer.baseline.json"
 
 
 def _load(path: str) -> dict:
@@ -80,6 +97,22 @@ def layout_vs_legacy_ratio(bench: dict) -> float:
     return float(bench["layout_vs_legacy"]["ratio"])
 
 
+def neural_speedup(bench: dict) -> float:
+    """Dense-path / FlashBias-neural-path time of the Table 6 inference
+    A/B (same machine, same call) from the BENCH_neural row dump."""
+    rows = {r["name"]: r for r in bench["rows"]}
+    dense = float(rows["table6_infer_dense_pairbias"]["us_per_call"])
+    flash = float(rows["table6_infer_flashbias_neural"]["us_per_call"])
+    return dense / flash
+
+
+def pairformer_headline(bench: dict) -> dict:
+    """Largest-n_res factored-vs-dense point of the batched-serve sweep
+    (ISSUE 6): ``ratio`` vs the official recompute dataflow, gated at
+    1.0; ``cached_ratio`` vs the cached dense bias, gated on baseline."""
+    return bench["factored_vs_dense"]
+
+
 def check(
     name: str,
     current: float,
@@ -93,13 +126,25 @@ def check(
         failures.append(name)
 
 
-def update_baselines(kernels: dict, serve: dict, baseline_dir: str) -> None:
+def update_baselines(
+    kernels: dict,
+    serve: dict,
+    baseline_dir: str,
+    neural: dict | None = None,
+    pairformer: dict | None = None,
+) -> None:
     os.makedirs(baseline_dir, exist_ok=True)
     occ, tps = serve_decode_point(serve)
     payloads = {
         KERNELS_BASELINE: {"speedup": kernels_speedup(kernels)},
         SERVE_BASELINE: {"occupancy": occ, "decode_tokens_per_s": tps},
     }
+    if neural is not None:
+        payloads[NEURAL_BASELINE] = {"speedup": neural_speedup(neural)}
+    if pairformer is not None:
+        payloads[PAIRFORMER_BASELINE] = {
+            "cached_ratio": float(pairformer_headline(pairformer)["cached_ratio"])
+        }
     for fname, payload in payloads.items():
         path = os.path.join(baseline_dir, fname)
         with open(path, "w") as f:
@@ -112,6 +157,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--kernels", default="BENCH_kernels.json")
     ap.add_argument("--serve", default="BENCH_serve.json")
+    ap.add_argument(
+        "--neural",
+        default=None,
+        help="BENCH_neural.json path; enables the Table 6 speedup gate",
+    )
+    ap.add_argument(
+        "--pairformer",
+        default=None,
+        help="BENCH_pairformer.json path; enables the batched-serve gates",
+    )
     ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
     ap.add_argument(
         "--tolerance",
@@ -128,8 +183,12 @@ def main(argv=None) -> int:
 
     kernels = _load(args.kernels)
     serve = _load(args.serve)
+    neural = _load(args.neural) if args.neural else None
+    pairformer = _load(args.pairformer) if args.pairformer else None
     if args.update_baseline:
-        update_baselines(kernels, serve, args.baseline_dir)
+        update_baselines(
+            kernels, serve, args.baseline_dir, neural=neural, pairformer=pairformer
+        )
         return 0
 
     kb = _load(os.path.join(args.baseline_dir, KERNELS_BASELINE))
@@ -176,6 +235,36 @@ def main(argv=None) -> int:
         f"interleaved A/B, no baseline, tol {args.tolerance:.0%}",
         failures,
     )
+    if neural is not None:
+        nb = _load(os.path.join(args.baseline_dir, NEURAL_BASELINE))
+        check(
+            "neural dense-vs-flashbias inference speedup",
+            neural_speedup(neural),
+            band * float(nb["speedup"]),
+            f"baseline {float(nb['speedup']):.3f}, tol {args.tolerance:.0%}",
+            failures,
+        )
+    if pairformer is not None:
+        head = pairformer_headline(pairformer)
+        check(
+            f"pairformer factored-vs-dense serve-step ratio "
+            f"@ n_res {head['n_res']}",
+            float(head["ratio"]),
+            band,
+            f"interleaved A/B vs official recompute path, no baseline, "
+            f"tol {args.tolerance:.0%}",
+            failures,
+        )
+        pb = _load(os.path.join(args.baseline_dir, PAIRFORMER_BASELINE))
+        check(
+            f"pairformer factored-vs-cached-bias ratio @ n_res "
+            f"{head['n_res']}",
+            float(head["cached_ratio"]),
+            band * float(pb["cached_ratio"]),
+            f"baseline {float(pb['cached_ratio']):.3f}, "
+            f"tol {args.tolerance:.0%}",
+            failures,
+        )
 
     if failures:
         print(f"benchmark regression gate FAILED: {failures}", file=sys.stderr)

@@ -136,6 +136,16 @@ def _attn_kernel(
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _attn_kernel_ragged(lengths_ref, *refs, **kw):
+    """Per-batch-length variant: ``lengths`` arrives via scalar prefetch
+    (SMEM, same idiom as flash_decode) and replaces the static ``kv_len``
+    bound — each batch row masks (and block-skips) at its OWN length, which
+    is what the serve engine's padded wave of variable-n_res complexes
+    needs. The body is the static kernel verbatim with a traced bound."""
+    kw.pop("kv_len", None)
+    _attn_kernel(*refs, kv_len=lengths_ref[pl.program_id(0)], **kw)
+
+
 def flashbias_attention_fwd(
     q: jax.Array,            # (B, H, N, D)
     k: jax.Array,            # (B, K, M, D)
@@ -148,6 +158,7 @@ def flashbias_attention_fwd(
     mask_kind: str = "none",
     window: int = 0,
     kv_len: Optional[int] = None,
+    lengths: Optional[jax.Array] = None,  # (B,) int32 per-batch kv bound
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
@@ -163,43 +174,56 @@ def flashbias_attention_fwd(
     grid = (b, h, n // block_q, m // block_k)
 
     in_specs = [
-        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
-        pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
-        pl.BlockSpec((1, 1, block_k, dv), lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j, *_: (b_, h_, i, 0)),
+        pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j, *_: (b_, h_ // group, j, 0)),
+        pl.BlockSpec((1, 1, block_k, dv), lambda b_, h_, i, j, *_: (b_, h_ // group, j, 0)),
     ]
     args = [q, k, v]
     if bias_mode == "phi":
         r = phi_q.shape[-1]
         in_specs += [
-            pl.BlockSpec((1, 1, block_q, r), lambda b_, h_, i, j: (b_, h_, i, 0)),
-            pl.BlockSpec((1, 1, block_k, r), lambda b_, h_, i, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, block_q, r), lambda b_, h_, i, j, *_: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, r), lambda b_, h_, i, j, *_: (b_, h_, j, 0)),
         ]
         args += [phi_q, phi_k]
     else:
         in_specs += [None, None]
         args += [None, None]
     if bias_mode == "alibi":
-        in_specs.append(pl.BlockSpec((1, 1), lambda b_, h_, i, j: (h_, 0)))
+        in_specs.append(pl.BlockSpec((1, 1), lambda b_, h_, i, j, *_: (h_, 0)))
         args.append(slopes)
     else:
         in_specs.append(None)
         args.append(None)
 
-    kernel = functools.partial(
-        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
-        mask_kind=mask_kind, window=window, kv_len=kv_len, bias_mode=bias_mode)
+    static = dict(scale=scale, block_q=block_q, block_k=block_k,
+                  mask_kind=mask_kind, window=window, bias_mode=bias_mode)
+    out_spec = pl.BlockSpec((1, 1, block_q, dv),
+                            lambda b_, h_, i, j, *_: (b_, h_, i, 0))
+    scratch = [
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, dv), jnp.float32),
+    ]
+    out_shape = jax.ShapeDtypeStruct((b, h, n, dv), q.dtype)
 
+    if lengths is not None:
+        kernel = functools.partial(_attn_kernel_ragged, **static)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=out_spec, scratch_shapes=scratch)
+        return pl.pallas_call(kernel, grid_spec=grid_spec,
+                              out_shape=out_shape, interpret=interpret)(
+            lengths.astype(jnp.int32), *args)
+
+    kernel = functools.partial(_attn_kernel, kv_len=kv_len, **static)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, block_q, dv), lambda b_, h_, i, j: (b_, h_, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, n, dv), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, dv), jnp.float32),
-        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*args)
     return out

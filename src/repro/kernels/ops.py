@@ -112,7 +112,7 @@ def _pick_block(s_len: int, want: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
-              chunk_size=512):
+              chunk_size=512, lengths=None):
     if slopes is not None:
         # materialize rank-2 ALiBi factors (cheap: (N+M)*2 elements)
         n, m, h = q.shape[1], k.shape[1], q.shape[2]
@@ -135,11 +135,12 @@ def _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
             phi_k, (*phi_k.shape[:2], q.shape[2], phi_k.shape[3]))
     return attn_mod.attention(
         q, k, v, mask=MaskSpec(mask_kind, window), scale=scale,
-        phi_q=phi_q, phi_k=phi_k, impl="chunked", chunk_size=chunk_size)
+        phi_q=phi_q, phi_k=phi_k, kv_length=lengths, impl="chunked",
+        chunk_size=chunk_size)
 
 
 def _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
-                 block_q, block_k, interpret):
+                 block_q, block_k, interpret, lengths=None):
     b, n, h, d = q.shape
     m, kvh = k.shape[1], k.shape[2]
     dv = v.shape[-1]
@@ -164,13 +165,13 @@ def _pallas_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
 
     out = _fa.flashbias_attention_fwd(
         qt, kt, vt, pqt, pkt, slopes2, scale=scale, mask_kind=mask_kind,
-        window=window, kv_len=m, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        window=window, kv_len=m, lengths=lengths, block_q=block_q,
+        block_k=block_k, interpret=interpret)
     return out.transpose(0, 2, 1, 3)[:, :n, :, :dv]
 
 
 def _pallas_path_hm(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
-                    block_q, block_k, interpret):
+                    block_q, block_k, interpret, lengths=None):
     """Head-major (``layout="bhsd"``) Pallas dispatch: the kernel's native
     layout arrives from the caller, so only tile padding remains (token-
     and channel-sized, never a whole-tensor transpose)."""
@@ -198,8 +199,8 @@ def _pallas_path_hm(q, k, v, phi_q, phi_k, slopes, mask_kind, window, scale,
 
     out = _fa.flashbias_attention_fwd(
         qt, kt, vt, pqt, pkt, slopes2, scale=scale, mask_kind=mask_kind,
-        window=window, kv_len=m, block_q=block_q, block_k=block_k,
-        interpret=interpret)
+        window=window, kv_len=m, lengths=lengths, block_q=block_q,
+        block_k=block_k, interpret=interpret)
     return out[:, :, :n, :dv]
 
 
@@ -229,7 +230,7 @@ def _to_bshd(x):
 
 
 def _xla_path_any_layout(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
-                         scale, layout):
+                         scale, layout, lengths=None):
     """XLA chunked fallback for either layout — the single canonicalize
     point for ``"bhsd"`` inputs (cheap views in, transposed view out;
     prefill-sized, one-time). The custom_vjp forward AND its backward
@@ -237,10 +238,10 @@ def _xla_path_any_layout(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
     if layout == "bhsd":
         o = _xla_path(_to_bshd(q), _to_bshd(k), _to_bshd(v),
                       _to_bshd(phi_q), _to_bshd(phi_k), slopes,
-                      mask_kind, window, scale)
+                      mask_kind, window, scale, lengths=lengths)
         return o.transpose(0, 2, 1, 3)
     return _xla_path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
-                     scale)
+                     scale, lengths=lengths)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
@@ -289,6 +290,30 @@ def _bwd(mask_kind, window, scale, impl, block_q, block_k, layout, res, g):
 _flash_attention_core.defvjp(_fwd, _bwd)
 
 
+def _flash_attention_ragged(q, k, v, phi_q, phi_k, slopes, lengths,
+                            mask_kind, window, scale, impl, block_q,
+                            block_k, layout):
+    """Non-causal ragged-batch path (``lengths`` per batch row): the serve
+    engine's padded wave of variable-length requests — each row masks keys
+    at positions >= its own length, so zero-padded rows (whose factor-MLP
+    biases are NOT zero) contribute exact zero.
+
+    Lives outside the custom_vjp (an int32 array can't ride its residual
+    contract): the XLA branch is natively differentiable, the Pallas branch
+    is forward-only — which is the only way the serve engine calls it.
+    """
+    if impl == "io_stub":
+        return _io_stub_path(q, k, v, phi_q, phi_k, v.shape[-1])
+    if impl == "xla":
+        return _xla_path_any_layout(q, k, v, phi_q, phi_k, slopes,
+                                    mask_kind, window, scale, layout,
+                                    lengths=lengths)
+    path = _pallas_path_hm if layout == "bhsd" else _pallas_path
+    return path(q, k, v, phi_q, phi_k, slopes, mask_kind, window,
+                scale, block_q, block_k,
+                interpret=(impl == "pallas_interpret"), lengths=lengths)
+
+
 def flash_attention(
     q: jax.Array,
     k: jax.Array,
@@ -304,6 +329,7 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     layout: str = "bshd",
+    lengths: Optional[jax.Array] = None,
 ) -> jax.Array:
     """FlashBias attention.
 
@@ -314,10 +340,22 @@ def flash_attention(
 
     Exactly one of {phi_q+phi_k, slopes, neither} selects the bias mode
     (factored / in-kernel ALiBi / none). Differentiable in q, k, v, phi_*.
+
+    ``lengths`` (B,) int32 opts into the RAGGED BATCH path: row b attends
+    only to keys at positions < lengths[b] (the serve engine's padded wave
+    of variable-length requests). Rows with length 0 output zeros.
+    Differentiable via the XLA path; the Pallas ragged kernel is
+    forward-only (inference — the only way the serve engine calls it).
     """
     assert layout in ("bshd", "bhsd"), layout
     scale = (1.0 / float(np.sqrt(q.shape[-1]))) if scale is None else scale
     assert not (phi_q is not None and slopes is not None)
+    if lengths is not None:
+        return _flash_attention_ragged(q, k, v, phi_q, phi_k, slopes,
+                                       jnp.asarray(lengths, jnp.int32),
+                                       mask_kind, window, scale,
+                                       resolve_impl(impl), block_q, block_k,
+                                       layout)
     return _flash_attention_core(q, k, v, phi_q, phi_k, slopes, mask_kind,
                                  window, scale, resolve_impl(impl),
                                  block_q, block_k, layout)

@@ -141,10 +141,23 @@ def _pairformer_model(cfg: ArchConfig) -> Model:
         b, n = shape.global_batch, shape.seq_len
         return {"feats": jax.ShapeDtypeStruct((b, n, 64), jnp.float32),
                 "coords": jax.ShapeDtypeStruct((b, n, 3), jnp.float32)}
-    return Model(cfg=cfg,
-                 template=lambda: pairformer.pairformer_template(cfg),
-                 loss=lambda p, batch: pairformer.denoise_loss(p, batch, cfg),
-                 input_specs=input_specs)
+    return Model(
+        cfg=cfg,
+        template=lambda: pairformer.pairformer_template(cfg),
+        loss=lambda p, batch: pairformer.denoise_loss(p, batch, cfg),
+        # batched serve path (ISSUE 6): "prefill" is the admission trunk
+        # pass capturing per-complex bias state, "decode" one refinement
+        # iteration over the slot batch. ``factors`` (the fitted factor
+        # MLPs) is backend state the PairBatchBackend closes over.
+        prefill=lambda p, batch, max_len=None, lengths=None, factors=None:
+            pairformer.serve_prefill(p, batch, cfg, factors,
+                                     max_len=max_len, lengths=lengths),
+        decode=lambda p, cache, tokens=None, max_pages=None:
+            pairformer.serve_step(p, cache, cfg),
+        init_cache=lambda b, max_len, length=0, factors=None:
+            pairformer.init_serve_cache(cfg, b, max_len, factors=factors),
+        insert_cache=pairformer.insert_serve_cache_at_slots,
+        input_specs=input_specs)
 
 
 def get_model(cfg: ArchConfig) -> Model:

@@ -33,7 +33,9 @@ from repro.kernels import ops as kops
 from repro.models.common import PDef, gelu_mlp, rmsnorm, stack_layers
 
 __all__ = ["pairformer_template", "forward", "denoise_loss",
-           "factor_mlp_template", "fit_factor_mlps"]
+           "factor_mlp_template", "fit_factor_mlps",
+           "init_serve_cache", "serve_prefill", "serve_step",
+           "insert_serve_cache_at_slots"]
 
 
 def pairformer_template(cfg: ArchConfig) -> dict:
@@ -161,6 +163,223 @@ def forward(params, feats, cfg: ArchConfig, factors: Optional[dict] = None):
 def denoise_loss(params, batch, cfg: ArchConfig, factors=None):
     pred = forward(params, batch["feats"], cfg, factors).astype(jnp.float32)
     return jnp.mean((pred - batch["coords"].astype(jnp.float32)) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Batched serve path (ISSUE 6): admission precomputes per-complex bias state
+# ONCE; every refinement step reuses it from the slot cache.
+#
+# A serve "request" is one complex: its (n_res, 64) residue features. The
+# admission trunk pass runs the full Pairformer once (triangle updates, pair
+# transitions — z evolves exactly as in ``forward``) and captures, per layer,
+# the attention bias STATE in one of three forms:
+#
+# - "mlp"   — factor MLP outputs phi_q/phi_k (L, B, N, H, R)  [Eq. 5],
+# - "svd"   — truncated-SVD factors of the projected dense bias, same
+#             shapes [Sec. 4.3; rank = cfg.bias_rank so the SVD jits],
+# - "dense" — the projected bias itself (L, B, H, N, N)
+#             [``bias_mode="dense"``] — the strongest dense baseline: one
+#             projection amortized at admission, steps only stream it,
+# - "pair"  — the per-layer pair rep itself (L, B, N, N, Dp)
+#             [``bias_mode="dense_recompute"``] — the OFFICIAL dataflow
+#             (the paper's Table 6 baseline): every step re-projects the
+#             bias from z at use, exactly as AF3's pair-bias attention
+#             does, trading Θ(N²·Dp·H) re-projection FLOPs + a Dp/H-times
+#             larger cache for zero admission-time bias work.
+#
+# z is DISCARDED after admission (the memory win: Θ((N+M)R) per layer rides
+# in the cache instead of Θ(N²) pair state + Θ(N²H) bias), and each serve
+# step is one refinement iteration over the single representation: scan all
+# L layers of pair-biased attention + transition with the frozen factors.
+#
+# Batching contract: every wave pads to the SAME n_res_max (the engine pins
+# it to max_len), and every op here is batch-row independent, so a complex's
+# trajectory is bit-identical whether it runs alone or packed with strangers
+# — the Pairformer analogue of the LM path's pinned ``prefill_len``.
+# Factor-MLP biases are nonzero at zero-padded residues (the MLPs carry
+# biases), so attention masks keys at positions >= the slot's n_res via the
+# ``lengths`` vector — exp(MASK - m) underflows to exactly 0.0 in f32, so
+# padded keys contribute exact zero.
+# ---------------------------------------------------------------------------
+
+
+def _serve_mode(cfg: ArchConfig, factors) -> str:
+    if cfg.bias_mode == "dense":
+        return "dense"
+    if cfg.bias_mode == "dense_recompute":
+        return "pair"
+    return "mlp" if factors is not None else "svd"
+
+
+def _attend_cached(lp, s, bias_state, cfg: ArchConfig, lengths):
+    """One pair-biased attention over the single rep from CACHED bias state
+    (factor pair or dense bias) — shared verbatim by the admission trunk
+    and the serve step, so the two can never diverge."""
+    dt = s.dtype
+    h = rmsnorm(s, lp["ln1"])
+    qkv = jnp.einsum("bnd,dthe->tbnhe", h, lp["wqkv"].astype(dt))
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    if isinstance(bias_state, tuple):
+        pq, pk = bias_state                        # (B, N, H, R) f32
+        o = kops.flash_attention(q, k, v, pq, pk, impl=cfg.attn_impl,
+                                 lengths=lengths)
+    else:
+        from repro.core.attention import attention as core_attn
+        o = core_attn(q, k, v, bias=bias_state, kv_length=lengths,
+                      impl="chunked", chunk_size=cfg.attn_chunk)
+    return s + jnp.einsum("bnhe,hed->bnd", o, lp["wo"].astype(dt))
+
+
+def _serve_rank(cfg: ArchConfig, n: int, mode: str) -> int:
+    """Factor width of the serve cache: the factor MLPs emit exactly
+    ``bias_rank`` columns, but an SVD of an (n, n) bias has at most n."""
+    return cfg.bias_rank if mode == "mlp" else min(cfg.bias_rank, n)
+
+
+def init_serve_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     factors=None) -> dict:
+    """Zeroed pair slot cache. ``length`` doubles as the active mask
+    (0 = retired slot, frozen by ``serve_step``). ``factors`` only selects
+    the factor width (MLP factors are fixed-rank; SVD rank caps at
+    ``max_len``) — the fitted params themselves are not read here."""
+    dt = jnp.dtype(cfg.dtype)
+    ln, h, d = cfg.n_layers, cfg.n_heads, cfg.d_model
+    cache = {"s": jnp.zeros((batch, max_len, d), dt),
+             "length": jnp.zeros((batch,), jnp.int32)}
+    mode = _serve_mode(cfg, factors)
+    if mode == "dense":
+        cache["bias"] = jnp.zeros((ln, batch, h, max_len, max_len),
+                                  jnp.float32)
+    elif mode == "pair":
+        cache["z"] = jnp.zeros((ln, batch, max_len, max_len, cfg.d_pair),
+                               dt)
+    else:
+        r = _serve_rank(cfg, max_len, mode)
+        cache["phi_q"] = jnp.zeros((ln, batch, max_len, h, r), jnp.float32)
+        cache["phi_k"] = jnp.zeros((ln, batch, max_len, h, r), jnp.float32)
+    return cache
+
+
+def serve_prefill(params, batch, cfg: ArchConfig, factors=None, *,
+                  max_len=None, lengths=None):
+    """Admission trunk pass over a padded wave of complexes.
+
+    batch: {"feats": (B, N_pad, 64)} with rows zero-padded past each
+    complex's n_res; ``lengths`` (B,) the true n_res (0 for padding rows).
+    Returns (None, wave_cache) — the wave cache rows scatter into the slot
+    cache via ``insert_serve_cache_at_slots``.
+    """
+    from repro.core.decomp import svd_factors
+
+    feats = batch["feats"]
+    b, n = feats.shape[0], feats.shape[1]
+    dt = jnp.dtype(cfg.dtype)
+    if lengths is None:
+        lengths = jnp.full((b,), n, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    mode = _serve_mode(cfg, factors)
+
+    valid = jnp.arange(n)[None, :] < lengths[:, None]          # (B, N)
+    s = jnp.einsum("bnf,fd->bnd", feats.astype(dt),
+                   params["single_in"].astype(dt))
+    s = jnp.where(valid[..., None], s, 0)
+    z = jnp.einsum("bnf,fc->bnc", feats.astype(dt),
+                   params["pair_in"].astype(dt))
+    z = z[:, :, None, :] + z[:, None, :, :]
+    # zero the pair rep outside the valid n_res x n_res block: the outer
+    # sum leaks z_i into (i, j_pad), and the triangle update contracts over
+    # ALL k — unmasked, padded k would contaminate valid entries. Zeroed
+    # once here it STAYS zero: rmsnorm(0) = 0 kills the triangle gates and
+    # the pair transition has no biases.
+    z = jnp.where((valid[:, :, None] & valid[:, None, :])[..., None], z, 0)
+
+    def body(carry, inp):
+        s, z = carry
+        lp, fl = inp if mode == "mlp" else (inp, None)
+        z = _triangle_update(lp, z)
+        if mode == "mlp":
+            h = rmsnorm(s, lp["ln1"])
+            fx = _factor_inputs(z, h).astype(jnp.float32)
+            state = (_factor_apply(fl["q"], fx, cfg.n_heads, cfg.bias_rank),
+                     _factor_apply(fl["k"], fx, cfg.n_heads, cfg.bias_rank))
+        elif mode == "svd":
+            bias = _pair_bias(lp, z, cfg.n_heads).astype(jnp.float32)
+            pq_h, pk_h = svd_factors(bias,
+                                     rank=_serve_rank(cfg, n, mode))
+            # (B, H, N, R) each -> residue-major (B, N, H, R)
+            state = (pq_h.transpose(0, 2, 1, 3), pk_h.transpose(0, 2, 1, 3))
+        elif mode == "pair":
+            state = z                  # post-triangle z, as forward() uses
+        else:
+            state = _pair_bias(lp, z, cfg.n_heads).astype(jnp.float32)
+        attn_state = (_pair_bias(lp, state, cfg.n_heads)
+                      .astype(jnp.float32) if mode == "pair" else state)
+        s = _attend_cached(lp, s, attn_state, cfg, lengths)
+        s = s + gelu_mlp(rmsnorm(s, lp["ln2"]), lp["wi"].astype(dt),
+                         lp["wo_mlp"].astype(dt))
+        z = z + gelu_mlp(rmsnorm(z, lp["pair_ln"]), lp["pair_wi"],
+                         lp["pair_wo"])
+        return (s, z), state
+
+    xs = ((params["layers"], factors) if mode == "mlp"
+          else params["layers"])
+    (s, _), states = jax.lax.scan(body, (s, z), xs,
+                                  unroll=flags.scan_unroll(cfg.n_layers))
+    cache = {"s": s, "length": lengths}
+    if mode == "dense":
+        cache["bias"] = states
+    elif mode == "pair":
+        cache["z"] = states
+    else:
+        cache["phi_q"], cache["phi_k"] = states
+    return None, cache
+
+
+def serve_step(params, cache, cfg: ArchConfig):
+    """One refinement iteration over every live slot: scan all L layers of
+    single-rep attention with the CACHED per-layer bias state (no triangle
+    update, no factor recompute — the per-complex factors were paid for
+    once at admission). Retired slots (length 0) are frozen."""
+    s0, lengths = cache["s"], cache["length"]
+    dt = s0.dtype
+    if "bias" in cache:
+        states = cache["bias"]
+    elif "z" in cache:
+        states = cache["z"]            # official dataflow: project at use
+    else:
+        states = (cache["phi_q"], cache["phi_k"])
+
+    pair_mode = "z" in cache
+
+    def body(s, inp):
+        lp, state = inp
+        if pair_mode:
+            # (B, N, N, Dp) pair rep -> re-project the bias at use
+            state = _pair_bias(lp, state, cfg.n_heads).astype(jnp.float32)
+        s = _attend_cached(lp, s, state, cfg, lengths)
+        s = s + gelu_mlp(rmsnorm(s, lp["ln2"]), lp["wi"].astype(dt),
+                         lp["wo_mlp"].astype(dt))
+        return s, None
+
+    s, _ = jax.lax.scan(body, s0, (params["layers"], states),
+                        unroll=flags.scan_unroll(cfg.n_layers))
+    active = (lengths > 0)[:, None, None]
+    return dict(cache, s=jnp.where(active, s, s0))
+
+
+def insert_serve_cache_at_slots(dst: dict, src: dict, slots) -> dict:
+    """Scatter prefilled wave rows into the slot cache. ``s``/``length``
+    lead with the batch axis; bias state leads with the layer axis (the
+    slot axis is second). Out-of-range slot ids drop (padding rows)."""
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for key, v in dst.items():
+        if key in ("s", "length"):
+            out[key] = v.at[slots].set(src[key].astype(v.dtype), mode="drop")
+        else:
+            out[key] = v.at[:, slots].set(src[key].astype(v.dtype),
+                                          mode="drop")
+    return out
 
 
 def fit_factor_mlps(key, params, factor_params, sample_feats, cfg: ArchConfig,

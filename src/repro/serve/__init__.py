@@ -3,10 +3,13 @@
 See README.md in this directory for the slot/cache/scheduler contract and
 the request lifecycle.
 """
+from repro.serve.backend import (Backend, PairBatchBackend,
+                                 TokenDecodeBackend)
 from repro.serve.engine import ServeEngine
 from repro.serve.pages import PagePool
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import FIFOScheduler, Request
 
-__all__ = ["ServeEngine", "PagePool", "SamplingParams", "sample_tokens",
+__all__ = ["ServeEngine", "Backend", "TokenDecodeBackend",
+           "PairBatchBackend", "PagePool", "SamplingParams", "sample_tokens",
            "FIFOScheduler", "Request"]

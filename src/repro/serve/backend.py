@@ -1,0 +1,502 @@
+"""Serve backends: what a workload owns vs. what the engine core owns.
+
+The engine core (``engine.ServeEngine``) owns the REQUEST machinery:
+request ids, the scheduler and admission waves, the slot free-list and
+live map, result/done bookkeeping, the preemption victim policy and the
+determinism contract. A ``Backend`` owns everything DEVICE-side for one
+workload family:
+
+- allocated state (caches, factor slabs, page pools, sampling state),
+- the jitted admit/step programs,
+- per-slot resources and their accounting (pages),
+- retire/freeze and preemption snapshots.
+
+``TokenDecodeBackend`` is the autoregressive LM path (KV caches, paged
+pools, sampling) — the pre-ISSUE-6 engine body moved here verbatim, so
+LM serve behavior is bit-identical to the monolithic engine.
+
+``PairBatchBackend`` serves batched Pairformer inference (the paper's
+Sec. 4.4 workload): a request is one complex, admission runs the trunk
+once and caches its per-layer pair-bias FACTORS (or the dense bias, for
+the A/B baseline), and every step is one refinement iteration of
+single-rep attention over the padded slot batch with per-slot ``n_res``
+masking. See serve/README.md §Backend contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.serve.pages import PagePool
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import Request
+
+__all__ = ["Backend", "TokenDecodeBackend", "PairBatchBackend"]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+class Backend:
+    """Protocol between the engine core and a workload backend.
+
+    ``admit``/``step`` return ``(emissions, mask)``: ``mask[slot]`` marks
+    slots that advanced one budget unit this call; ``emissions`` is a
+    per-slot int array of emitted token ids, or None for backends that
+    emit nothing incrementally (the engine then collects the result via
+    ``fetch_result`` when the budget drains). Slot registration, budget
+    accounting and retirement stay in the engine core.
+    """
+
+    paged: bool = False        # admission gated on page accounting
+    lazy: bool = False         # pages grow mid-flight (may force preemption)
+
+    def ensure_state(self) -> None:
+        """Allocate device state on first use (idempotent)."""
+        raise NotImplementedError
+
+    def validate(self, req: Request) -> None:
+        """Submit-time bounds check (raises on an inadmissible request)."""
+        raise NotImplementedError
+
+    def admit(self, wave: List[Request],
+              slots: List[int]) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        """Prefill ``wave`` into ``slots``; returns (emissions, mask)."""
+        raise NotImplementedError
+
+    def step(self, live: Dict[int, object]
+             ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        """Advance every live slot one budget unit."""
+        raise NotImplementedError
+
+    def fetch_result(self, slot: int, st) -> Optional[np.ndarray]:
+        """Final non-incremental result for a finishing slot (or None)."""
+        return None
+
+    def release(self, slot: int) -> None:
+        """Retire a finished slot: freeze its cache row, free resources."""
+        raise NotImplementedError
+
+    def snapshot(self, slot: int, st, emitted) -> Request:
+        """Preempt: freeze + free the slot, return the resumable Request."""
+        raise NotImplementedError
+
+    # -- resource accounting (paged backends) ---------------------------
+    def admission_units(self, req: Request) -> int:
+        """Resource units (pages) reserved when ``req`` is admitted."""
+        return 0
+
+    def units_free(self) -> int:
+        return 0
+
+    def growth_pending(self, live: Dict[int, object]) -> List[int]:
+        """Slots whose next step needs a resource grown first."""
+        return []
+
+    def grow_slots(self, growing: List[int]) -> None:
+        raise NotImplementedError
+
+    def page_cap(self, live: Dict[int, object]) -> Optional[int]:
+        """Static page bound for this step (None for unpaged backends)."""
+        return None
+
+    def stats(self) -> dict:
+        return {}
+
+
+class TokenDecodeBackend(Backend):
+    """Autoregressive LM decode: KV caches, paged pools, per-slot sampling.
+
+    This is the pre-refactor engine body: prefill waves right-padded and
+    batch-padded to ``n_slots``, one jitted decode step over the full slot
+    batch, per-request PRNG key chains, paged KV with lazy page growth.
+    Every computation and its ordering is preserved from the monolithic
+    engine, so behavior is bit-identical.
+    """
+
+    def __init__(self, model: Model, params: dict, max_len: int,
+                 n_slots: int, prefill_len: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 pages_per_slot: Optional[int] = None,
+                 page_reservation: str = "lazy"):
+        assert page_reservation in ("lazy", "whole"), page_reservation
+        self.model, self.params = model, params
+        self.max_len, self.n_slots = max_len, n_slots
+        self.prefill_len = prefill_len
+        cfg = model.cfg
+        self._vocab = cfg.vocab
+        self._front_dim = (cfg.frontend_len, cfg.d_model)
+        # full-KV families must fit prompt + budget inside the slot segment
+        # (contiguous mode) or inside the page pool (paged mode)
+        self._bounded_cache = (cfg.family in ("dense", "moe", "hybrid")
+                               and not (cfg.window and cfg.window < max_len))
+        self.paged = (page_size is not None and self._bounded_cache
+                      and model.init_paged_cache is not None)
+        self.lazy = self.paged and page_reservation == "lazy"
+        if self.paged:
+            self.page_size = page_size
+            self.n_pages = n_pages or n_slots * _ceil_to(max_len,
+                                                         page_size) // page_size
+            self.pages_per_slot = min(pages_per_slot or self.n_pages,
+                                      self.n_pages)
+            self._pool = PagePool(self.n_pages, page_size)
+            self._slot_pages: Dict[int, List[int]] = {}
+        self._cache = None                        # allocated on first step
+
+        def _pf(p, toks, front, lengths, max_len):
+            batch = {"tokens": toks}
+            if front is not None:
+                batch["frontend"] = front
+            return model.prefill(p, batch, max_len=max_len, lengths=lengths)
+
+        self._prefill = jax.jit(_pf, static_argnames=("max_len",))
+        # max_pages is a STATIC cap on the pages a paged decode step may
+        # reference: the engine passes a power-of-two rounding of its
+        # host-mirrored longest live length, so the paged XLA fallback
+        # gathers Θ(longest request) instead of the full page-table width
+        # while recompiling at most log2(pages_per_slot) times.
+        self._decode = jax.jit(model.decode, static_argnames=("max_pages",))
+        self._insert = jax.jit(model.insert_cache)
+        if self.paged:
+            self._insert_paged = jax.jit(model.insert_paged)
+            self._grow_tables = jax.jit(model.grow_page_table)
+
+    # -- lifecycle ------------------------------------------------------
+
+    def ensure_state(self) -> None:
+        if self._cache is not None:
+            return
+        ns = self.n_slots
+        if self.paged:
+            self._cache = self.model.init_paged_cache(
+                ns, self.n_pages, self.page_size, self.pages_per_slot)
+        else:
+            self._cache = self.model.init_cache(ns, self.max_len)
+        self._temps = jnp.zeros((ns,), jnp.float32)
+        self._topks = jnp.zeros((ns,), jnp.int32)
+        self._keys = jnp.zeros((ns, 2), jnp.uint32)
+        self._last_tok = jnp.zeros((ns, 1), jnp.int32)
+
+    def validate(self, req: Request) -> None:
+        assert np.issubdtype(req.tokens.dtype, np.integer), \
+            "token backend takes int token prompts"
+        if self.prefill_len is not None:
+            assert req.tokens.size <= self.prefill_len, \
+                (req.tokens.size, self.prefill_len)
+        if self._bounded_cache and self.paged:
+            # paged: prompt + budget may exceed max_len (the PR-2 segment
+            # bound is gone). The real bounds are the request's own
+            # page-table row and the pool itself — a footprint the pool
+            # can never cover would preempt everything and still deadlock
+            needed = self._pages_needed(req)
+            cap = min(self.pages_per_slot, self.n_pages)
+            assert needed <= cap, \
+                f"paged mode: request footprint {needed} pages " \
+                f"(ceil((prompt {req.prompt_len} + budget " \
+                f"{req.max_new_tokens} - 1) / page_size {self.page_size}))" \
+                f" exceeds {cap} " \
+                f"(page-table row width {self.pages_per_slot}, " \
+                f"pool {self.n_pages} pages)"
+        elif self._bounded_cache:
+            assert req.prompt_len + req.max_new_tokens <= self.max_len, \
+                f"contiguous mode: prompt {req.prompt_len} + budget " \
+                f"{req.max_new_tokens} exceeds the per-slot segment " \
+                f"max_len={self.max_len} (paged mode lifts this bound — " \
+                f"pass page_size)"
+        # ring-KV keeps only the last `window` keys and SSM state is
+        # constant-size, so those families accept prompts of any length
+
+    # -- paged accounting -----------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        """Pages a request can ever touch: its final cache length is
+        ``prompt + budget - 1`` (the last sampled token is never fed
+        back)."""
+        return self._pool.pages_needed(req.prompt_len + req.max_new_tokens
+                                       - 1)
+
+    def admission_units(self, req: Request) -> int:
+        """Pages reserved at admission: just the prompt's under lazy
+        growth, the full worst-case footprint under ``"whole"``."""
+        if self.lazy:
+            return self._pool.pages_needed(req.prompt_len)
+        return self._pages_needed(req)
+
+    def units_free(self) -> int:
+        return self._pool.n_free
+
+    def page_cap(self, live) -> Optional[int]:
+        """Static page bound for this decode step: pow2-rounded pages of
+        the longest live length (+1 for the position being written), so
+        the jitted step recompiles only when a length crosses a doubling
+        boundary. None for unpaged engines."""
+        if not self.paged:
+            return None
+        longest = max((st.length for st in live.values()), default=0)
+        need = max(1, -(-(longest + 1) // self.page_size))
+        cap = 1
+        while cap < need:
+            cap *= 2
+        return min(cap, self.pages_per_slot)
+
+    def growth_pending(self, live) -> List[int]:
+        ps = self.page_size
+        return [s for s, st in live.items()
+                if st.length // ps >= len(self._slot_pages[s])]
+
+    def grow_slots(self, growing: List[int]) -> None:
+        """Allocate the next page for every growing slot and push the new
+        table rows to the device in one fixed-shape jitted scatter."""
+        slot_ids = np.full((self.n_slots,), self.n_slots, np.int32)
+        tables = np.full((self.n_slots, self.pages_per_slot), self.n_pages,
+                         np.int32)
+        for i, slot in enumerate(growing):
+            pages = self._slot_pages[slot]
+            pages += self._pool.grow(1)
+            assert len(pages) <= self.pages_per_slot, (slot, len(pages))
+            slot_ids[i] = slot
+            tables[i, :len(pages)] = pages
+        self._cache = self._grow_tables(self._cache, jnp.asarray(slot_ids),
+                                        jnp.asarray(tables))
+
+    # -- admit / step ----------------------------------------------------
+
+    def admit(self, wave: List[Request], slots: List[int]):
+        """Prefill the wave into freed slots and sample each admitted
+        request's first token from its prefill logits."""
+        ns, w = self.n_slots, len(wave)
+
+        # right-pad prompts; pad the wave batch to n_slots so exactly one
+        # prefill program serves every wave size (padding rows are dropped
+        # at insert via an out-of-range slot id). A resumed prompt may
+        # exceed a pinned prefill_len — that wave pads to the resumed
+        # length, and _take_wave made it a SOLO wave so no co-admitted
+        # request sees the changed padding
+        padded = max(r.tokens.size for r in wave)
+        if self.prefill_len is not None:
+            padded = max(self.prefill_len, padded)
+        toks = np.zeros((ns, padded), np.int32)
+        lengths = np.ones((ns,), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, :r.tokens.size] = r.tokens
+            lengths[i] = r.prompt_len
+        front = None
+        has_front = [r.frontend is not None for r in wave]
+        if any(has_front):
+            assert all(has_front), \
+                "wave mixes frontend/frontend-less requests"
+            front = np.zeros((ns,) + self._front_dim, np.float32)
+            for i, r in enumerate(wave):
+                front[i] = r.frontend
+            front = jnp.asarray(front)
+
+        front_len = self._front_dim[0] if front is not None else 0
+        if self.paged:
+            # the wave cache only needs to hold the padded prompt, page-
+            # aligned — NOT a full max_len segment; pages scatter from it
+            pf_len = _ceil_to(padded + front_len, self.page_size)
+        else:
+            pf_len = self.max_len
+        logits, wave_cache = self._prefill(
+            self.params, jnp.asarray(toks), front, jnp.asarray(lengths),
+            pf_len)
+        slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
+        slot_ids[:w] = slots
+        if self.paged:
+            # lazy: reserve only the prompt's pages — decode grows the
+            # table on page-boundary crossings. whole: reserve the full
+            # footprint so decode never allocates mid-flight
+            tables = np.full((ns, self.pages_per_slot), self.n_pages,
+                             np.int32)
+            for i, (slot, r) in enumerate(zip(slots, wave)):
+                pages = self._pool.alloc(self.admission_units(r))
+                self._slot_pages[slot] = pages
+                tables[i, :len(pages)] = pages
+            self._cache = self._insert_paged(self._cache, wave_cache,
+                                             slot_ids, jnp.asarray(tables))
+        else:
+            self._cache = self._insert(self._cache, wave_cache, slot_ids)
+
+        # per-slot sampling state + per-request PRNG chains; a preempted
+        # request resumes from its key snapshot so its sample stream stays
+        # aligned with its token count
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        self._temps = self._temps.at[sl].set(jnp.asarray(
+            [r.sampling.temperature for r in wave], jnp.float32))
+        self._topks = self._topks.at[sl].set(jnp.asarray(
+            [r.sampling.top_k for r in wave], jnp.int32))
+        self._keys = self._keys.at[sl].set(jnp.stack(
+            [jax.random.PRNGKey(r.sampling.seed) if r.key_override is None
+             else jnp.asarray(r.key_override, jnp.uint32) for r in wave]))
+
+        # first token: scatter wave-row logits into slot rows, sample
+        lg = jnp.zeros((ns, logits.shape[-1]), logits.dtype)
+        lg = lg.at[jnp.asarray(slot_ids)].set(logits[:, 0], mode="drop")
+        mask = np.zeros((ns,), bool)
+        mask[slots] = True
+        return self._sample(lg, mask), mask
+
+    def step(self, live):
+        """One jitted decode step over the full slot batch."""
+        logits, self._cache = self._decode(self.params, self._cache,
+                                           self._last_tok,
+                                           max_pages=self.page_cap(live))
+        for st in live.values():
+            st.length += 1
+        mask = np.zeros((self.n_slots,), bool)
+        mask[list(live)] = True
+        return self._sample(logits[:, 0], mask), mask
+
+    def _sample(self, logits2d, mask: np.ndarray) -> np.ndarray:
+        """Sample all slots; commit key/token state for ``mask`` slots only
+        (keeping every request's key chain aligned with its token
+        count)."""
+        toks, new_keys = sample_tokens(logits2d, self._temps, self._topks,
+                                       self._keys, self._vocab)
+        m = jnp.asarray(mask)
+        self._keys = jnp.where(m[:, None], new_keys, self._keys)
+        self._last_tok = jnp.where(m[:, None], toks[:, None],
+                                   self._last_tok)
+        return np.asarray(toks)
+
+    # -- retire / preempt ------------------------------------------------
+
+    def release(self, slot: int) -> None:
+        """Free a finished slot: zero its cache length so the decode
+        step's active mask freezes the lane (ISSUE 3: retired slots used
+        to keep advancing their length and writing garbage KV every step —
+        fatal under paging, where the stale page table points at pages
+        that may already belong to another request), and return its
+        pages."""
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        if self.paged:
+            self._pool.free(self._slot_pages.pop(slot))
+
+    def snapshot(self, slot: int, st, emitted) -> Request:
+        """Preemption snapshot: generated-so-far folds into the prompt
+        (budget shrinks by the same amount), the PRNG key chain is
+        snapshotted into ``key_override``, the slot freezes (length 0) and
+        its pages return to the pool immediately. Re-prefill of prompt +
+        generated reproduces the exact cache the preempted decode had
+        built — prefill/decode parity is the tested invariant."""
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        if self.paged:
+            self._pool.free(self._slot_pages.pop(slot))
+        req = st.req
+        gen = emitted[-st.generated:]
+        return Request(
+            req.rid, np.concatenate([req.tokens,
+                                     np.asarray(gen, np.int32)]),
+            req.max_new_tokens - st.generated, req.sampling, req.frontend,
+            key_override=np.asarray(self._keys)[slot],
+            priority=req.priority)
+
+    def stats(self) -> dict:
+        if not self.paged:
+            return {}
+        return {"n_pages": self.n_pages, "n_free": self._pool.n_free,
+                "watermark": self._pool.watermark,
+                "grown": self._pool.n_grown}
+
+
+class PairBatchBackend(Backend):
+    """Batched Pairformer inference (FlashBias Sec. 4.4).
+
+    A request is ONE COMPLEX: its payload is a float (n_res, F) residue
+    feature array, its budget ``max_new_tokens`` is the number of
+    refinement iterations, and its result is the final single
+    representation (n_res, d_model). Admission runs the full trunk once
+    (triangle updates, pair transitions) and caches each layer's pair-bias
+    state per slot — factor-MLP phi_q/phi_k when ``factors`` is given
+    (Eq. 5), truncated-SVD factors of the projected bias when not
+    (Sec. 4.3), or the dense (H, N, N) bias itself under
+    ``cfg.bias_mode="dense"`` (the A/B baseline). The pair representation
+    z is then DISCARDED: steps run attention + transition over the single
+    rep only, reusing the frozen factors — the factor cache is the
+    Pairformer analogue of the LM path's KV cache.
+
+    Batching pads every wave to ``max_len`` residues (pinned, like the LM
+    ``prefill_len``) and masks attention per slot at its own ``n_res`` —
+    factor-MLP biases are nonzero at padded residues, so the mask is
+    load-bearing, not cosmetic. Preemption restarts a complex from scratch
+    (nothing is emitted incrementally, so the re-run is trivially
+    deterministic and the snapshot carries no device state).
+    """
+
+    def __init__(self, model: Model, params: dict, max_len: int,
+                 n_slots: int, factors: Optional[dict] = None):
+        self.model, self.params = model, params
+        self.max_len, self.n_slots = max_len, n_slots
+        self.factors = factors
+        self._cache = None
+
+        def _pf(p, feats, lengths, factors, max_len):
+            return model.prefill(p, {"feats": feats}, max_len=max_len,
+                                 lengths=lengths, factors=factors)
+
+        self._prefill = jax.jit(_pf, static_argnames=("max_len",))
+        self._step = jax.jit(model.decode)
+        self._insert = jax.jit(model.insert_cache)
+
+    def ensure_state(self) -> None:
+        if self._cache is None:
+            self._cache = self.model.init_cache(self.n_slots, self.max_len,
+                                                factors=self.factors)
+
+    def validate(self, req: Request) -> None:
+        assert req.tokens.dtype == np.float32 and req.tokens.ndim == 2, \
+            "pair request payload must be a float (n_res, F) feature array"
+        assert req.tokens.shape[0] <= self.max_len, \
+            f"complex has {req.tokens.shape[0]} residues; slot batch is " \
+            f"padded to max_len={self.max_len}"
+        assert req.frontend is None, "pair requests carry no frontend"
+
+    def admit(self, wave: List[Request], slots: List[int]):
+        """Trunk pass over the padded wave; scatter per-layer bias state
+        into the slot factor cache. Emits nothing (mask all-False): the
+        budget counts refinement STEPS, and admission is step 0."""
+        ns, w = self.n_slots, len(wave)
+        f = wave[0].tokens.shape[1]
+        feats = np.zeros((ns, self.max_len, f), np.float32)
+        lengths = np.zeros((ns,), np.int32)
+        for i, r in enumerate(wave):
+            feats[i, :r.tokens.shape[0]] = r.tokens
+            lengths[i] = r.tokens.shape[0]
+        _, wave_cache = self._prefill(self.params, jnp.asarray(feats),
+                                      jnp.asarray(lengths), self.factors,
+                                      self.max_len)
+        slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
+        slot_ids[:w] = slots
+        self._cache = self._insert(self._cache, wave_cache,
+                                   jnp.asarray(slot_ids))
+        return None, np.zeros((ns,), bool)
+
+    def step(self, live):
+        """One refinement iteration over every live slot (single jitted
+        call; retired slots are frozen by their zero length)."""
+        self._cache = self._step(self.params, self._cache)
+        mask = np.zeros((self.n_slots,), bool)
+        mask[list(live)] = True
+        return None, mask
+
+    def fetch_result(self, slot: int, st) -> np.ndarray:
+        n = st.req.tokens.shape[0]
+        return np.asarray(self._cache["s"][slot, :n], np.float32)
+
+    def release(self, slot: int) -> None:
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+
+    def snapshot(self, slot: int, st, emitted) -> Request:
+        """Preemption = restart: freeze the slot and re-queue the original
+        request with its full budget (no incremental output was emitted,
+        so the re-run is deterministic by construction)."""
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        req = st.req
+        return Request(req.rid, req.tokens, req.max_new_tokens,
+                       req.sampling, req.frontend, priority=req.priority)

@@ -1,47 +1,41 @@
-"""Continuous-batching serve engine over the ragged flash-decode path.
+"""Continuous-batching serve engine core (backend-abstracted since ISSUE 6).
 
-The engine owns ``n_slots`` decode lanes. Each slot is one batch row of
-every cache leaf — a ``max_len`` KV segment (ring window / SSM state for
-those families), its own ``length`` entry, sampling state (temperature,
-top-k, PRNG key chain) and an output buffer. A FIFO scheduler admits
-queued requests into freed slots; each admission wave is prefilled
-right-padded (batch padded to ``n_slots`` and prompt padded to the wave
-maximum or a pinned ``prefill_len``, so at most a handful of prefill
-programs ever compile) and scattered into the slot cache with
-``Model.insert_cache``. Decode is ONE jitted step over the full slot batch
-every iteration — per-request raggedness rides in the ``lengths`` vector
-the flash-decode kernel block-skips on — so arbitrary arrival/finish
-patterns never recompile and never stall on the slowest request.
+The engine owns ``n_slots`` lanes and everything REQUEST-shaped: request
+ids, the scheduler and admission waves, the slot free-list and live map,
+result/done bookkeeping, budget accounting, and the preemption victim
+policy. Everything DEVICE-shaped — caches, page pools, sampling state, the
+jitted admit/step programs — lives in a ``serve.backend.Backend``:
 
-Determinism contract (tested in tests/test_serve_engine.py): every
-per-slot computation is batch-row independent and the sampler key chain is
-per-request, so a request's output is identical whether it runs alone or
-packed with strangers — provided ``prefill_len`` is pinned (the padded
-prompt length is the one shape that changes with wave composition).
+- ``TokenDecodeBackend`` (LM families): KV caches (full / paged / ring /
+  SSM), per-request PRNG sampling chains, lazy page growth. This is the
+  pre-refactor engine body moved verbatim — LM serve behavior is
+  bit-identical to the monolithic engine.
+- ``PairBatchBackend`` (``cfg.family == "pairformer"``): batched
+  Pairformer inference where a request is one complex, admission runs the
+  trunk once and caches the per-layer pair-bias FACTORS per slot
+  (FlashBias Sec. 4.4), and each step is one refinement iteration over the
+  padded slot batch with per-slot ``n_res`` masking.
 
-Cache kinds (all pytrees, all jit-traceable; stored in the flash-decode
-kernels' kv-head-major layout since ISSUE 5 — the decode step hands them
-to the kernels zero-copy, see serve/README.md §Cache layout contract):
+The admission/step loop is backend-agnostic: a FIFO scheduler (with
+priority classes — higher admits first, preempts last) fills freed slots,
+each admission wave is padded to ``n_slots`` and prefilled in one jitted
+call, and every engine step advances the full slot batch in ONE jitted
+program — per-request raggedness rides in the ``lengths`` vector, so
+arbitrary arrival/finish patterns never recompile and never stall on the
+slowest request.
 
-- full KV            (dense/moe archs)        — (L, B, KV, S_max, hd),
-- paged KV           (full-KV + ``page_size``) — shared (L, KV, n_pages,
-  ps, hd) pool + per-page phi_k factor slab + per-slot page tables,
-- ring KV            (sliding-window archs)   — (L, B, KV, window, hd),
-- SSM state + conv   (ssm/hybrid archs)       — constant size.
+Determinism contract (tested in tests/test_serve_engine.py /
+test_pair_serve.py): every per-slot computation is batch-row independent
+and sampler key chains are per-request, so a request's output is identical
+whether it runs alone or packed with strangers — provided the padded
+prompt length is pinned (``prefill_len`` for LM; ``max_len`` pins it
+structurally for the pair backend).
 
-Paged mode (pass ``page_size``) replaces the per-slot ``max_len`` segment
-with a vLLM-style shared page pool. Since ISSUE 4 page reservation is LAZY
-by default: admission reserves only the pages covering a request's prompt,
-and ``decode`` grows a slot by one page when its length crosses a page
-boundary. When the pool runs dry mid-flight the engine PREEMPTS the
-lowest-priority in-flight request (latest arrival): its generated tokens
-are snapshotted into its prompt, its PRNG key chain is snapshotted, its
-pages free immediately, and it re-enters at the head of the queue for
-re-prefill — greedy outputs are bit-identical to the never-preempted run.
-``page_reservation="whole"`` restores the PR-3 whole-request reservation
-(decode never allocates, nothing is ever preempted for pages). Retired
-slots are frozen via the length-0 active mask so a stale page table can
-never scribble on reallocated pages. See serve/README.md §Paged KV.
+Paged mode, lazy growth and preemption semantics are unchanged from
+ISSUEs 3-5 (see serve/README.md §Paged KV): when the pool runs dry the
+engine preempts the lowest-priority live request (lowest priority class,
+then latest arrival), whose snapshot re-enters at the head of the queue —
+greedy outputs are bit-identical to the never-preempted run.
 """
 from __future__ import annotations
 
@@ -49,25 +43,19 @@ import bisect
 import dataclasses
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
-from repro.serve.pages import PagePool
-from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.backend import PairBatchBackend, TokenDecodeBackend
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import FIFOScheduler, Request
 
 __all__ = ["ServeEngine"]
 
 
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
 @dataclasses.dataclass
 class _Slot:
-    """Host-side state of one occupied decode lane.
+    """Host-side state of one occupied lane.
 
     ``length`` mirrors ``cache["length"][slot]``: it is the position the
     NEXT decode step will write, which is what lazy page growth gates on
@@ -78,43 +66,38 @@ class _Slot:
 
 
 class ServeEngine:
-    """Slot-based continuous-batching engine (prefill/decode/sample).
+    """Slot-based continuous-batching engine (admit/step/commit core).
 
     Args:
-        model: a decode-capable ``Model`` (prefill/decode/init_cache/
-            insert_cache).
+        model: a serve-capable ``Model`` (prefill/decode/init_cache/
+            insert_cache). ``cfg.family`` selects the backend:
+            ``"pairformer"`` gets the batched pair-inference backend,
+            every decode family gets the token backend.
         params: parameter pytree.
-        max_len: per-slot cache segment length (prompt + decode budget must
-            fit for full-KV families in contiguous mode).
-        eos_id: generation stops when this id is sampled (it is kept in the
-            output; remaining columns of ``generate`` pad with it). -1
-            never matches, i.e. requests always run out their budget.
-        n_slots: fixed decode batch — the number of concurrent requests.
-        prefill_len: pinned padded prompt length. None pads each admission
-            wave to its own maximum (fewest wasted FLOPs); pinning it makes
-            request outputs independent of wave composition and bounds
-            prefill compiles to one. A preempted request's resumed prompt
-            (original prompt + generated-so-far) may exceed it; such waves
-            pad to the resumed length instead.
-        page_size: enables PAGED KV for full-KV families — the cache
-            becomes a shared pool of ``n_pages`` pages of ``page_size``
-            tokens (K, V, and the per-page phi_k factor slab), admission is
-            gated on free pages instead of the slot-segment bound, and a
-            request may exceed ``max_len`` as long as its pages fit. Ring-KV
-            and SSM-only families ignore it (their caches are already
-            constant-size per slot).
-        n_pages: pool size; defaults to ``n_slots * ceil(max_len /
-            page_size)`` — the same HBM the contiguous layout would commit.
-        pages_per_slot: page-table width = one request's max page count.
-            Defaults to ``n_pages`` (a lone request may take the whole
-            pool); lower it to bound the per-step logical view.
-        page_reservation: ``"lazy"`` (default) reserves only the prompt's
-            pages at admit and grows on demand, preempting when the pool
-            runs dry; ``"whole"`` reserves a request's full worst-case
-            footprint at admit (PR-3 behaviour — decode never allocates).
+        max_len: per-slot cache segment length. For the pair backend this
+            is the pinned residue padding — every wave pads to it, so one
+            prefill/step program serves all complexes and outputs are
+            independent of wave composition.
+        eos_id: generation stops when this id is sampled (kept in the
+            output; ``generate`` pads remaining columns with it). -1 never
+            matches, i.e. requests always run out their budget. Ignored by
+            non-emitting backends.
+        n_slots: fixed batch — the number of concurrent requests.
+        prefill_len: pinned padded prompt length (token backend only).
+            None pads each admission wave to its own maximum (fewest
+            wasted FLOPs); pinning it makes request outputs independent of
+            wave composition and bounds prefill compiles to one.
+        page_size / n_pages / pages_per_slot / page_reservation: paged-KV
+            knobs, forwarded to the token backend (see its docstring and
+            serve/README.md §Paged KV). Ignored by the pair backend.
         scheduler_policy: ``"fifo"`` (default) admits in arrival order;
-            ``"spf"`` admits the shortest queued prompt first. Preempted
-            requests resume ahead of arrivals under either policy.
+            ``"spf"`` admits the shortest queued prompt first. Priority
+            classes order above either policy; preempted requests resume
+            ahead of same-priority arrivals.
+        factors: fitted pair-bias factor MLP params (pair backend only).
+            None selects per-complex SVD factors at ``cfg.bias_rank``
+            (``cfg.bias_mode="dense"`` caches the dense bias instead —
+            the A/B baseline).
     """
 
     def __init__(self, model: Model, params: dict, max_len: int = 1024,
@@ -124,57 +107,60 @@ class ServeEngine:
                  n_pages: Optional[int] = None,
                  pages_per_slot: Optional[int] = None,
                  page_reservation: str = "lazy",
-                 scheduler_policy: str = "fifo"):
+                 scheduler_policy: str = "fifo",
+                 factors: Optional[dict] = None):
         assert model.prefill is not None and model.decode is not None, \
-            "model is not decode-capable"
+            "model is not serve-capable"
         assert page_reservation in ("lazy", "whole"), page_reservation
         self.model, self.params = model, params
         self.max_len, self.eos_id = max_len, eos_id
         self.n_slots, self.prefill_len = n_slots, prefill_len
-        cfg = model.cfg
-        self._vocab = cfg.vocab
-        self._front_dim = (cfg.frontend_len, cfg.d_model)
-        # full-KV families must fit prompt + budget inside the slot segment
-        # (contiguous mode) or inside the page pool (paged mode)
-        self._bounded_cache = (cfg.family in ("dense", "moe", "hybrid")
-                               and not (cfg.window and cfg.window < max_len))
-        self._paged = (page_size is not None and self._bounded_cache
-                       and model.init_paged_cache is not None)
-        self._lazy = self._paged and page_reservation == "lazy"
+        if model.cfg.family == "pairformer":
+            self.backend = PairBatchBackend(model, params, max_len=max_len,
+                                            n_slots=n_slots, factors=factors)
+        else:
+            self.backend = TokenDecodeBackend(
+                model, params, max_len=max_len, n_slots=n_slots,
+                prefill_len=prefill_len, page_size=page_size,
+                n_pages=n_pages, pages_per_slot=pages_per_slot,
+                page_reservation=page_reservation)
+        if self.backend.paged:
+            self.page_size = self.backend.page_size
+            self.n_pages = self.backend.n_pages
+            self.pages_per_slot = self.backend.pages_per_slot
         self.n_preemptions = 0
-        if self._paged:
-            self.page_size = page_size
-            self.n_pages = n_pages or n_slots * _ceil_to(max_len,
-                                                         page_size) // page_size
-            self.pages_per_slot = min(pages_per_slot or self.n_pages,
-                                      self.n_pages)
-            self._pool = PagePool(self.n_pages, page_size)
-            self._slot_pages: Dict[int, List[int]] = {}
         self.scheduler = FIFOScheduler(policy=scheduler_policy)
         self._next_rid = 0
-        self._results: Dict[int, List[int]] = {}
+        self._results: Dict[int, object] = {}   # rid -> [ids] | result array
         self._done: Dict[int, bool] = {}
         self._live: Dict[int, _Slot] = {}         # slot -> _Slot
         self._free: List[int] = list(range(n_slots))
-        self._cache = None                        # allocated on first step
 
-        def _pf(p, toks, front, lengths, max_len):
-            batch = {"tokens": toks}
-            if front is not None:
-                batch["frontend"] = front
-            return model.prefill(p, batch, max_len=max_len, lengths=lengths)
+    # -- legacy aliases: device state lives in the backend now, but the
+    # -- pre-ISSUE-6 attribute names remain the observable surface used by
+    # -- tests and benches
+    @property
+    def _cache(self):
+        return self.backend._cache
 
-        self._prefill = jax.jit(_pf, static_argnames=("max_len",))
-        # max_pages is a STATIC cap on the pages a paged decode step may
-        # reference: the engine passes a power-of-two rounding of its
-        # host-mirrored longest live length, so the paged XLA fallback
-        # gathers Θ(longest request) instead of the full page-table width
-        # while recompiling at most log2(pages_per_slot) times.
-        self._decode = jax.jit(model.decode, static_argnames=("max_pages",))
-        self._insert = jax.jit(model.insert_cache)
-        if self._paged:
-            self._insert_paged = jax.jit(model.insert_paged)
-            self._grow_tables = jax.jit(model.grow_page_table)
+    @property
+    def _pool(self):
+        return self.backend._pool
+
+    @property
+    def _slot_pages(self):
+        return self.backend._slot_pages
+
+    @property
+    def _paged(self) -> bool:
+        return self.backend.paged
+
+    @property
+    def _lazy(self) -> bool:
+        return self.backend.lazy
+
+    def _page_cap(self) -> Optional[int]:
+        return self.backend.page_cap(self._live)
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -182,44 +168,34 @@ class ServeEngine:
 
     def submit(self, tokens, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
-               frontend: Optional[np.ndarray] = None) -> int:
-        """Queue one request; returns its request id."""
+               frontend: Optional[np.ndarray] = None,
+               priority: int = 0) -> int:
+        """Queue one request; returns its request id.
+
+        ``priority`` is the request's class: higher admits before lower
+        regardless of arrival order, and preemption victims are drawn from
+        the lowest class first. The default 0 for every request reproduces
+        the pre-class engine exactly.
+        """
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, np.asarray(tokens), max_new_tokens,
-                      sampling or SamplingParams(), frontend)
-        if self.prefill_len is not None:
-            assert req.tokens.size <= self.prefill_len, \
-                (req.tokens.size, self.prefill_len)
-        if self._bounded_cache and self._paged:
-            # paged: prompt + budget may exceed max_len (the PR-2 segment
-            # bound is gone). The real bounds are the request's own
-            # page-table row and the pool itself — a footprint the pool
-            # can never cover would preempt everything and still deadlock
-            needed = self._pages_needed(req)
-            cap = min(self.pages_per_slot, self.n_pages)
-            assert needed <= cap, \
-                f"paged mode: request footprint {needed} pages " \
-                f"(ceil((prompt {req.prompt_len} + budget {max_new_tokens} " \
-                f"- 1) / page_size {self.page_size})) exceeds {cap} " \
-                f"(page-table row width {self.pages_per_slot}, " \
-                f"pool {self.n_pages} pages)"
-        elif self._bounded_cache:
-            assert req.prompt_len + max_new_tokens <= self.max_len, \
-                f"contiguous mode: prompt {req.prompt_len} + budget " \
-                f"{max_new_tokens} exceeds the per-slot segment " \
-                f"max_len={self.max_len} (paged mode lifts this bound — " \
-                f"pass page_size)"
-        # ring-KV keeps only the last `window` keys and SSM state is
-        # constant-size, so those families accept prompts of any length
+                      sampling or SamplingParams(), frontend,
+                      priority=priority)
+        self.backend.validate(req)
         self._results[rid] = []
         self._done[rid] = False
         self.scheduler.add(req)
         return rid
 
-    def result(self, rid: int) -> np.ndarray:
-        """Generated ids so far for ``rid`` (complete iff ``is_done``)."""
-        return np.asarray(self._results[rid], np.int32)
+    def result(self, rid: int):
+        """Result so far for ``rid`` (complete iff ``is_done``): generated
+        ids for the token backend, the final (n_res, d_model) single
+        representation for the pair backend."""
+        res = self._results[rid]
+        if isinstance(res, np.ndarray):
+            return res
+        return np.asarray(res, np.int32)
 
     def is_done(self, rid: int) -> bool:
         return self._done[rid]
@@ -229,13 +205,11 @@ class ServeEngine:
         return len(self._live)
 
     def page_stats(self) -> dict:
-        """Pool accounting snapshot (empty for unpaged engines)."""
-        if not self._paged:
-            return {}
-        return {"n_pages": self.n_pages, "n_free": self._pool.n_free,
-                "watermark": self._pool.watermark,
-                "grown": self._pool.n_grown,
-                "preemptions": self.n_preemptions}
+        """Pool accounting snapshot (empty for unpaged backends)."""
+        stats = self.backend.stats()
+        if stats:
+            stats["preemptions"] = self.n_preemptions
+        return stats
 
     # ------------------------------------------------------------------
     # Engine steps
@@ -243,7 +217,7 @@ class ServeEngine:
 
     def step(self) -> List[int]:
         """Admit queued requests into free slots, then advance every live
-        slot one token. Returns rids that finished during this step."""
+        slot one budget unit. Returns rids that finished this step."""
         self._ensure_state()
         finished = []
         if self._free and len(self.scheduler):
@@ -257,32 +231,6 @@ class ServeEngine:
         self._ensure_state()
         while self._live or len(self.scheduler):
             self.step()
-
-    def _page_cap(self) -> Optional[int]:
-        """Static page bound for this decode step: pow2-rounded pages of
-        the longest live length (+1 for the position being written), so
-        the jitted step recompiles only when a length crosses a doubling
-        boundary. None for unpaged engines."""
-        if not self._paged:
-            return None
-        longest = max((st.length for st in self._live.values()), default=0)
-        need = max(1, -(-(longest + 1) // self.page_size))
-        cap = 1
-        while cap < need:
-            cap *= 2
-        return min(cap, self.pages_per_slot)
-
-    def _pages_needed(self, req: Request) -> int:
-        """Pages a request can ever touch: its final cache length is
-        ``prompt + budget - 1`` (the last sampled token is never fed back)."""
-        return self._pool.pages_needed(req.prompt_len + req.max_new_tokens - 1)
-
-    def _pages_at_admit(self, req: Request) -> int:
-        """Pages reserved at admission: just the prompt's under lazy
-        growth, the full worst-case footprint under ``"whole"``."""
-        if self._lazy:
-            return self._pool.pages_needed(req.prompt_len)
-        return self._pages_needed(req)
 
     def _take_wave(self) -> List[Request]:
         """Pop the next admission wave: one request per free slot, gated in
@@ -304,9 +252,9 @@ class ServeEngine:
                     and r.tokens.size > self.prefill_len)
             if over and wave:
                 break                    # over-length request: next wave
-            if self._paged:
-                needed = self._pages_at_admit(r)
-                if needed > self._pool.n_free - reserved:
+            if self.backend.paged:
+                needed = self.backend.admission_units(r)
+                if needed > self.backend.units_free() - reserved:
                     break                # backpressure: wait for frees
                 reserved += needed
             wave.append(self.scheduler.take(1)[0])
@@ -315,104 +263,47 @@ class ServeEngine:
         return wave
 
     def admit(self) -> List[int]:
-        """Prefill the next admission wave into freed slots and emit each
-        admitted request's first token (from its prefill logits)."""
+        """Prefill the next admission wave into freed slots; the backend
+        decides what (if anything) each admission emits — the token
+        backend samples each request's first token from its prefill
+        logits, the pair backend emits nothing (its budget counts
+        refinement steps)."""
         self._ensure_state()
         wave = self._take_wave()
         if not wave:
             return []
         slots = [self._free.pop(0) for _ in wave]
-        ns, w = self.n_slots, len(wave)
-
-        # right-pad prompts; pad the wave batch to n_slots so exactly one
-        # prefill program serves every wave size (padding rows are dropped
-        # at insert via an out-of-range slot id). A resumed prompt may
-        # exceed a pinned prefill_len — that wave pads to the resumed
-        # length, and _take_wave made it a SOLO wave so no co-admitted
-        # request sees the changed padding
-        pl = max(r.tokens.size for r in wave)
-        if self.prefill_len is not None:
-            pl = max(self.prefill_len, pl)
-        toks = np.zeros((ns, pl), np.int32)
-        lengths = np.ones((ns,), np.int32)
-        for i, r in enumerate(wave):
-            toks[i, :r.tokens.size] = r.tokens
-            lengths[i] = r.prompt_len
-        front = None
-        has_front = [r.frontend is not None for r in wave]
-        if any(has_front):
-            assert all(has_front), "wave mixes frontend/frontend-less requests"
-            front = np.zeros((ns,) + self._front_dim, np.float32)
-            for i, r in enumerate(wave):
-                front[i] = r.frontend
-            front = jnp.asarray(front)
-
-        front_len = self._front_dim[0] if front is not None else 0
-        if self._paged:
-            # the wave cache only needs to hold the padded prompt, page-
-            # aligned — NOT a full max_len segment; pages scatter from it
-            pf_len = _ceil_to(pl + front_len, self.page_size)
-        else:
-            pf_len = self.max_len
-        logits, wave_cache = self._prefill(
-            self.params, jnp.asarray(toks), front, jnp.asarray(lengths),
-            pf_len)
-        slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
-        slot_ids[:w] = slots
-        if self._paged:
-            # lazy: reserve only the prompt's pages — decode grows the
-            # table on page-boundary crossings. whole: reserve the full
-            # footprint so decode never allocates mid-flight
-            tables = np.full((ns, self.pages_per_slot), self.n_pages,
-                             np.int32)
-            for i, (slot, r) in enumerate(zip(slots, wave)):
-                pages = self._pool.alloc(self._pages_at_admit(r))
-                self._slot_pages[slot] = pages
-                tables[i, :len(pages)] = pages
-            self._cache = self._insert_paged(self._cache, wave_cache,
-                                             slot_ids, jnp.asarray(tables))
-        else:
-            self._cache = self._insert(self._cache, wave_cache, slot_ids)
-
-        # per-slot sampling state + per-request PRNG chains; a preempted
-        # request resumes from its key snapshot so its sample stream stays
-        # aligned with its token count
-        sl = jnp.asarray(np.asarray(slots, np.int32))
-        self._temps = self._temps.at[sl].set(jnp.asarray(
-            [r.sampling.temperature for r in wave], jnp.float32))
-        self._topks = self._topks.at[sl].set(jnp.asarray(
-            [r.sampling.top_k for r in wave], jnp.int32))
-        self._keys = self._keys.at[sl].set(jnp.stack(
-            [jax.random.PRNGKey(r.sampling.seed) if r.key_override is None
-             else jnp.asarray(r.key_override, jnp.uint32) for r in wave]))
-
-        # first token: scatter wave-row logits into slot rows, sample
-        lg = jnp.zeros((ns, logits.shape[-1]), logits.dtype)
-        lg = lg.at[jnp.asarray(slot_ids)].set(logits[:, 0], mode="drop")
-        mask = np.zeros((ns,), bool)
-        mask[slots] = True
+        emissions, mask = self.backend.admit(wave, slots)
         for slot, r in zip(slots, wave):
             self._live[slot] = _Slot(r, length=r.prompt_len)
-        return self._sample_and_commit(lg, mask)
+        return self._commit(emissions, mask)
 
     def decode(self) -> List[int]:
-        """One jitted decode step over the full slot batch. Lazy paged
-        mode first grows any slot whose write position crossed a page
-        boundary — preempting the lowest-priority request if the pool is
-        dry — so the jitted step itself never allocates."""
+        """Advance every live slot one budget unit in one jitted backend
+        step. Lazy paged mode first grows any slot whose write position
+        crossed a page boundary — preempting the lowest-priority request
+        while the pool is dry — so the jitted step itself never
+        allocates."""
         self._ensure_state()
-        if self._lazy:
-            self._grow_pages()
+        if self.backend.lazy:
+            # when the pool can't cover the growth, preempt lowest-
+            # priority live requests (possibly a growing request itself —
+            # freeing it both clears its demand and returns its pages)
+            # until it can; (priority, arrival) is a total order, so the
+            # highest-priority earliest-arrived request always makes
+            # progress and the engine can never preempt itself into a
+            # livelock
+            growing = self.backend.growth_pending(self._live)
+            while growing and self.backend.units_free() < len(growing):
+                victim = self._victim_slot()
+                self._preempt_slot(victim)
+                growing = [s for s in growing if s != victim]
+            if growing:
+                self.backend.grow_slots(growing)
         if not self._live:
             return []
-        logits, self._cache = self._decode(self.params, self._cache,
-                                           self._last_tok,
-                                           max_pages=self._page_cap())
-        for st in self._live.values():
-            st.length += 1
-        mask = np.zeros((self.n_slots,), bool)
-        mask[list(self._live)] = True
-        return self._sample_and_commit(logits[:, 0], mask)
+        emissions, mask = self.backend.step(self._live)
+        return self._commit(emissions, mask)
 
     def generate(self, prompts, max_new_tokens: int, frontend=None,
                  sampling: Optional[SamplingParams] = None) -> np.ndarray:
@@ -422,6 +313,9 @@ class ServeEngine:
         Returns (B, max_new_tokens) generated ids; rows that stop early at
         ``eos_id`` pad the remaining columns with ``eos_id``.
         """
+        assert isinstance(self.backend, TokenDecodeBackend), \
+            "generate() is a token-emitting API; submit()/result() serve " \
+            "pair requests"
         rows = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
         rids = [self.submit(row, max_new_tokens, sampling=sampling,
                             frontend=None if frontend is None
@@ -435,24 +329,32 @@ class ServeEngine:
         return out
 
     # ------------------------------------------------------------------
-    # Preemption (lazy paged mode; public for any cache family)
+    # Preemption (lazy paged mode; public for any backend)
     # ------------------------------------------------------------------
+
+    def _victim_slot(self) -> int:
+        """Lowest priority class first, then latest arrival (highest rid)
+        — with all-default priorities this is exactly the pre-class
+        victim, so existing preemption behavior is unchanged."""
+        return min(self._live,
+                   key=lambda s: (self._live[s].req.priority,
+                                  -self._live[s].req.rid))
 
     def preempt(self, rid: Optional[int] = None) -> Optional[int]:
         """Preempt one in-flight request and re-queue it at the head.
 
-        Default victim is the lowest-priority live request (priority is
-        arrival order, so: the highest rid). Returns the preempted rid, or
-        None when nothing is live. The engine calls this automatically
-        when lazy page growth finds the pool dry; it is public so tests
-        and external policies can force it for ANY cache family (ring-KV /
-        SSM slots hold no pages but preempt the same way).
+        Default victim is the lowest-priority live request (lowest class,
+        latest arrival). Returns the preempted rid, or None when nothing
+        is live. The engine calls this automatically when lazy page growth
+        finds the pool dry; it is public so tests and external policies
+        can force it for ANY backend (ring-KV / SSM slots hold no pages
+        but preempt the same way; a pair slot restarts its complex).
         """
         self._ensure_state()
         if not self._live:
             return None
         if rid is None:
-            slot = max(self._live, key=lambda s: self._live[s].req.rid)
+            slot = self._victim_slot()
         else:
             matches = [s for s, st in self._live.items()
                        if st.req.rid == rid]
@@ -463,111 +365,51 @@ class ServeEngine:
     def _preempt_slot(self, slot: int) -> int:
         """Snapshot + free + re-queue one slot.
 
-        The victim's generated-so-far tokens are appended to its prompt
-        (budget shrinks by the same amount), its PRNG key chain is
-        snapshotted into ``key_override``, its slot is frozen (length 0)
-        and its pages return to the pool immediately. Re-prefill of
-        prompt + generated reproduces the exact cache the preempted decode
-        had built — prefill/decode parity is the tested invariant — so a
-        greedy request's output is bit-identical to the run that was never
-        preempted, and a sampled request continues its key chain unbroken.
+        The backend builds the resumable request — the token backend folds
+        generated-so-far into the prompt and snapshots the PRNG key chain
+        (greedy outputs stay bit-identical to the never-preempted run; a
+        sampled request continues its key chain unbroken), the pair
+        backend restarts the complex from scratch. Either way the slot
+        freezes, its resources free immediately, and the snapshot re-
+        enters at the head of its priority class.
         """
         st = self._live.pop(slot)
         bisect.insort(self._free, slot)
-        self._cache["length"] = self._cache["length"].at[slot].set(0)
-        if self._paged:
-            self._pool.free(self._slot_pages.pop(slot))
-        req = st.req
-        gen = self._results[req.rid][-st.generated:]
-        resumed = Request(
-            req.rid, np.concatenate([req.tokens,
-                                     np.asarray(gen, np.int32)]),
-            req.max_new_tokens - st.generated, req.sampling, req.frontend,
-            key_override=np.asarray(self._keys)[slot])
+        resumed = self.backend.snapshot(slot, st, self._results[st.req.rid])
         self.scheduler.add_front(resumed)
         self.n_preemptions += 1
-        return req.rid
-
-    def _grow_pages(self) -> None:
-        """Lazy growth pre-pass: allocate the next page for every live
-        slot whose write position (== its host-mirrored length) crossed
-        its page-table frontier, then push the new table rows to the
-        device in one fixed-shape jitted scatter. When the pool can't
-        cover the growth, preempt lowest-priority live requests (possibly
-        a growing request itself — freeing it both clears its demand and
-        returns its pages) until it can; priority is a total order on
-        arrival, so the earliest-arrived request always makes progress and
-        the engine can never preempt itself into a livelock."""
-        ps = self.page_size
-        growing = [s for s, st in self._live.items()
-                   if st.length // ps >= len(self._slot_pages[s])]
-        while growing and self._pool.n_free < len(growing):
-            victim = max(self._live, key=lambda s: self._live[s].req.rid)
-            self._preempt_slot(victim)
-            growing = [s for s in growing if s != victim]
-        if not growing:
-            return
-        slot_ids = np.full((self.n_slots,), self.n_slots, np.int32)
-        tables = np.full((self.n_slots, self.pages_per_slot), self.n_pages,
-                         np.int32)
-        for i, slot in enumerate(growing):
-            pages = self._slot_pages[slot]
-            pages += self._pool.grow(1)
-            assert len(pages) <= self.pages_per_slot, (slot, len(pages))
-            slot_ids[i] = slot
-            tables[i, :len(pages)] = pages
-        self._cache = self._grow_tables(self._cache, jnp.asarray(slot_ids),
-                                        jnp.asarray(tables))
+        return st.req.rid
 
     # ------------------------------------------------------------------
     # Internals
     # ------------------------------------------------------------------
 
     def _ensure_state(self) -> None:
-        if self._cache is not None:
-            return
-        ns = self.n_slots
-        if self._paged:
-            self._cache = self.model.init_paged_cache(
-                ns, self.n_pages, self.page_size, self.pages_per_slot)
-        else:
-            self._cache = self.model.init_cache(ns, self.max_len)
-        self._temps = jnp.zeros((ns,), jnp.float32)
-        self._topks = jnp.zeros((ns,), jnp.int32)
-        self._keys = jnp.zeros((ns, 2), jnp.uint32)
-        self._last_tok = jnp.zeros((ns, 1), jnp.int32)
+        self.backend.ensure_state()
 
-    def _retire_slot(self, slot: int) -> None:
-        """Free a finished slot: zero its cache length so ``decode_step``'s
-        active mask freezes the lane (ISSUE 3: retired slots used to keep
-        advancing their length and writing garbage KV every step — fatal
-        under paging, where the stale page table points at pages that may
-        already belong to another request), and return its pages."""
-        self._cache["length"] = self._cache["length"].at[slot].set(0)
-        if self._paged:
-            self._pool.free(self._slot_pages.pop(slot))
+    def _commit(self, emissions: Optional[np.ndarray],
+                mask: np.ndarray) -> List[int]:
+        """Record this step's emissions and retire finished requests.
 
-    def _sample_and_commit(self, logits2d, mask: np.ndarray) -> List[int]:
-        """Sample all slots, commit key/token state for ``mask`` slots only
-        (keeping every request's key chain aligned with its token count),
-        record tokens and retire finished requests."""
-        toks, new_keys = sample_tokens(logits2d, self._temps, self._topks,
-                                       self._keys, self._vocab)
-        m = jnp.asarray(mask)
-        self._keys = jnp.where(m[:, None], new_keys, self._keys)
-        self._last_tok = jnp.where(m[:, None], toks[:, None], self._last_tok)
-        toks_np = np.asarray(toks)
-
+        ``mask`` marks slots that advanced one budget unit; ``emissions``
+        is per-slot token ids (token backend) or None (pair backend —
+        nothing emitted incrementally; the result is fetched from the
+        backend when the budget drains)."""
         finished = []
         for slot in [s for s in self._live if mask[s]]:
             st = self._live[slot]
-            t = int(toks_np[slot])
-            self._results[st.req.rid].append(t)
+            t = None if emissions is None else int(emissions[slot])
+            if t is not None:
+                self._results[st.req.rid].append(t)
             st.generated += 1
-            if t == self.eos_id or st.generated >= st.req.max_new_tokens:
+            if ((t is not None and t == self.eos_id)
+                    or st.generated >= st.req.max_new_tokens):
+                res = self.backend.fetch_result(slot, st)
+                if res is not None:
+                    self._results[st.req.rid] = res
                 self._done[st.req.rid] = True
                 finished.append(st.req.rid)
                 del self._live[slot]
                 bisect.insort(self._free, slot)
-                self._retire_slot(slot)
+                self.backend.release(slot)
         return finished

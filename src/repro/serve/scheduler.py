@@ -2,22 +2,33 @@
 
 Host-side and deliberately simple: requests join a queue; whenever the
 engine has freed slots it asks for the next admission wave. The default
-``policy="fifo"`` never reorders (no head-of-line bypass, no length
-bucketing), so a request's admission step is a pure function of the arrival
-order — which keeps the engine's per-request reproducibility contract easy
-to reason about. ``policy="spf"`` (shortest-prompt-first) is an opt-in
-toggle that admits the queued request with the smallest prompt first
-(stable: ties break on arrival order) — it trades the arrival-order
-guarantee for lower head-of-line blocking when prompts are wildly mixed.
+``policy="fifo"`` never reorders within a priority class (no head-of-line
+bypass, no length bucketing), so a request's admission step is a pure
+function of the arrival order — which keeps the engine's per-request
+reproducibility contract easy to reason about. ``policy="spf"``
+(shortest-prompt-first) is an opt-in toggle that admits the queued request
+with the smallest prompt first (stable: ties break on arrival order) — it
+trades the arrival-order guarantee for lower head-of-line blocking when
+prompts are wildly mixed.
+
+Priority classes (ISSUE 6): ``Request.priority`` (higher = more urgent,
+default 0) is the OUTER sort key under either policy — the scheduler
+drains class by class, FIFO/SPF *within* a class. When every request
+carries the default priority the order is bit-identical to the pre-class
+scheduler, so the determinism contract's arrival-order reasoning is
+unchanged for existing callers. The engine's preemption victim hook is the
+mirror image: it evicts the LOWEST class first (latest arrival within the
+class), so (priority, arrival) stays a total order and the earliest
+request of the highest class always makes progress — no livelock.
 
 Preempted requests re-enter through ``add_front`` and always resume BEFORE
-any queued arrival, under either policy: a preempted request already spent
-pool pages and prefill FLOPs once, so letting arrivals overtake it would
-both starve it and re-inflate the very memory pressure that forced the
-preemption. Within the front queue, lower request ids (earlier arrivals)
-stay ahead — preemption priority is arrival order, so resume priority is
-too. Smarter policies (prefill/decode interleaving budgets) can swap in
-behind the same surface.
+any queued arrival of any class: a preempted request already spent pool
+pages and prefill FLOPs once, so letting arrivals overtake it would both
+starve it and re-inflate the very memory pressure that forced the
+preemption. Within the front queue, higher classes stay ahead and lower
+request ids (earlier arrivals) break ties — resume order mirrors
+preemption order. Smarter policies (prefill/decode interleaving budgets)
+can swap in behind the same surface.
 """
 from __future__ import annotations
 
@@ -36,32 +47,52 @@ __all__ = ["Request", "FIFOScheduler"]
 class Request:
     """One generation request (host-side descriptor).
 
+    ``tokens`` is the request payload: an integer array is a (T,) token
+    prompt (LM backends); a FLOAT array is kept float32 as-is — e.g. a
+    Pairformer complex's (n_res, F) residue features — and ``prompt_len``
+    reads its leading axis.
+
     ``key_override`` carries a preempted request's PRNG key snapshot: the
     sampler consumes one split per emitted token, so resuming from the
     snapshot (instead of re-seeding from ``sampling.seed``) keeps the
     sample stream bit-identical to the run that was never preempted.
+
+    ``priority``: higher admits first and preempts last; 0 is the default
+    class, negative classes are valid (scavenger traffic).
     """
     rid: int
-    tokens: np.ndarray                        # (T,) int32 prompt
+    tokens: np.ndarray                        # (T,) int32 prompt | float feats
     max_new_tokens: int
     sampling: SamplingParams = SamplingParams()
     frontend: Optional[np.ndarray] = None     # (F, D) precomputed embeddings
     key_override: Optional[np.ndarray] = None  # (2,) uint32 resume PRNG key
+    priority: int = 0
 
     def __post_init__(self):
-        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
-        assert self.tokens.size >= 1, "empty prompt"
+        arr = np.asarray(self.tokens)
+        if np.issubdtype(arr.dtype, np.floating):
+            self.tokens = np.asarray(arr, np.float32)
+            assert self.tokens.ndim >= 1 and self.tokens.shape[0] >= 1, \
+                "empty feature payload"
+        else:
+            self.tokens = np.asarray(arr, np.int32).reshape(-1)
+            assert self.tokens.size >= 1, "empty prompt"
         assert self.max_new_tokens >= 1, self.max_new_tokens
 
     @property
     def prompt_len(self) -> int:
         """Valid prefix length (frontend embeddings included)."""
         front = 0 if self.frontend is None else self.frontend.shape[0]
-        return front + int(self.tokens.size)
+        return front + int(self.tokens.shape[0])
+
+    @property
+    def _order(self):
+        """Queue sort key: higher class first, earlier arrival within it."""
+        return (-self.priority, self.rid)
 
 
 class FIFOScheduler:
-    """Admission into freed slots: FIFO by default, optional SPF toggle."""
+    """Admission into freed slots: priority classes, FIFO (or SPF) within."""
 
     def __init__(self, policy: str = "fifo"):
         assert policy in ("fifo", "spf"), policy
@@ -76,23 +107,27 @@ class FIFOScheduler:
         self._queue.append(req)
 
     def add_front(self, req: Request) -> None:
-        """Re-queue a preempted request ahead of every arrival. Earlier
-        arrivals (lower rid) stay ahead within the front queue, matching
-        the engine's preemption priority."""
+        """Re-queue a preempted request ahead of every arrival. Higher
+        classes stay ahead within the front queue; earlier arrivals (lower
+        rid) break ties — matching the engine's preemption order."""
         i = 0
-        while i < len(self._front) and self._front[i].rid < req.rid:
+        while i < len(self._front) and self._front[i]._order < req._order:
             i += 1
         self._front.insert(i, req)
 
     def _pick(self) -> int:
         """Index into ``_queue`` of the next request under ``policy``
-        (-1 when empty). Callers drain ``_front`` first."""
+        (-1 when empty). Callers drain ``_front`` first. The class is the
+        outer key; with all-default priorities this reduces exactly to the
+        classless pick (index 0 / shortest prompt)."""
         if not self._queue:
             return -1
         if self.policy == "spf":
             return min(range(len(self._queue)),
-                       key=lambda i: (self._queue[i].prompt_len, i))
-        return 0
+                       key=lambda i: (-self._queue[i].priority,
+                                      self._queue[i].prompt_len, i))
+        return min(range(len(self._queue)),
+                   key=lambda i: (-self._queue[i].priority, i))
 
     def peek(self) -> Optional[Request]:
         """Next request without popping (None when empty) — lets the

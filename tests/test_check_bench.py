@@ -42,6 +42,24 @@ def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0):
     }
 
 
+def _healthy_neural(dense_us=2000.0, flash_us=2000.0):
+    return {"rows": [
+        {"name": "table6_infer_dense_pairbias", "us_per_call": dense_us},
+        {"name": "table6_infer_flashbias_neural", "us_per_call": flash_us},
+        {"name": "unrelated_row", "us_per_call": 1.0},
+    ]}
+
+
+def _healthy_pairformer(ratio=1.2, cached_ratio=1.0):
+    point = {"n_res": 384, "ratio": ratio, "cached_ratio": cached_ratio,
+             "factored_step_ms": 1.0, "dense_step_ms": ratio,
+             "cached_bias_step_ms": cached_ratio}
+    return {"points": [
+        {"n_res": 128, "ratio": 0.5, "cached_ratio": 0.5},  # small-N decoy
+        point,
+    ], "factored_vs_dense": point}
+
+
 @pytest.fixture
 def files(tmp_path):
     bdir = tmp_path / "baselines"
@@ -49,6 +67,8 @@ def files(tmp_path):
     _write(bdir / check_bench.KERNELS_BASELINE, {"speedup": 1.0})
     _write(bdir / check_bench.SERVE_BASELINE,
            {"occupancy": 4, "decode_tokens_per_s": 2000.0})
+    _write(bdir / check_bench.NEURAL_BASELINE, {"speedup": 1.0})
+    _write(bdir / check_bench.PAIRFORMER_BASELINE, {"cached_ratio": 1.0})
     kernels = _write(tmp_path / "k.json", _healthy_kernels())
     serve = _write(tmp_path / "s.json", _healthy_serve())
     return tmp_path, str(bdir), kernels, serve
@@ -151,3 +171,72 @@ def test_gates_highest_occupancy_point(files):
     occ, tps = check_bench.serve_decode_point(json.load(open(s)))
     assert (occ, tps) == (4, 2000.0)
     assert _run(bdir, kernels, s) == 0
+
+
+def test_neural_gate_opt_in(files):
+    """--neural enables the Table 6 speedup gate: healthy passes, a
+    regressed flash path fails, and omitting the flag skips the gate
+    entirely (even with a regressed file on disk)."""
+    tmp, bdir, kernels, serve = files
+    good = _write(tmp / "n.json", _healthy_neural())
+    assert _run(bdir, kernels, serve, "--neural", good) == 0
+    bad = _write(tmp / "bad_n.json", _healthy_neural(flash_us=5000.0))
+    assert _run(bdir, kernels, serve, "--neural", bad) == 1
+    assert _run(bdir, kernels, serve) == 0  # flag absent -> gate skipped
+
+
+def test_pairformer_headline_gate(files):
+    """--pairformer gates the factored-vs-official-recompute ratio of the
+    LARGEST-n_res point at >= 1 - tolerance; a factored path slower than
+    the recompute dataflow fails CI."""
+    tmp, bdir, kernels, serve = files
+    good = _write(tmp / "p.json", _healthy_pairformer())
+    assert _run(bdir, kernels, serve, "--pairformer", good) == 0
+    bad = _write(tmp / "bad_p.json", _healthy_pairformer(ratio=0.5))
+    assert _run(bdir, kernels, serve, "--pairformer", bad) == 1
+    assert _run(bdir, kernels, serve) == 0  # flag absent -> gate skipped
+
+
+def test_pairformer_cached_ratio_tripwire(files):
+    """The cached_ratio gate compares against its committed baseline — a
+    drop beyond tolerance (e.g. the factored step silently materializing
+    the dense bias) fails even when the headline ratio stays healthy."""
+    tmp, bdir, kernels, serve = files
+    bad = _write(tmp / "trip.json", _healthy_pairformer(cached_ratio=0.5))
+    assert _run(bdir, kernels, serve, "--pairformer", bad) == 1
+    near = _write(tmp / "near_p.json", _healthy_pairformer(cached_ratio=0.8))
+    assert _run(bdir, kernels, serve, "--pairformer", near) == 0
+    assert _run(bdir, kernels, serve, "--pairformer", near,
+                "--tolerance", "0.05") == 1
+
+
+def test_pairformer_headline_is_largest_n_res():
+    """The gated point is factored_vs_dense — bench_pairformer pins it to
+    the largest-n_res sweep point, not the small-N decoy where the
+    factored path legitimately loses on CPU."""
+    head = check_bench.pairformer_headline(_healthy_pairformer())
+    assert head["n_res"] == 384
+    assert head["ratio"] == pytest.approx(1.2)
+
+
+def test_update_baseline_writes_opt_in_files(files, tmp_path):
+    """--update-baseline with the opt-in flags also refreshes the neural
+    and pairformer baselines; without the flags it leaves them unwritten."""
+    tmp, _, kernels, serve = files
+    new_dir = str(tmp_path / "fresh_opt")
+    n = _write(tmp / "n_up.json", _healthy_neural(dense_us=3000.0))
+    p = _write(tmp / "p_up.json", _healthy_pairformer(cached_ratio=0.9))
+    assert _run(new_dir, kernels, serve, "--neural", n, "--pairformer", p,
+                "--update-baseline") == 0
+    with open(os.path.join(new_dir, check_bench.NEURAL_BASELINE)) as f:
+        assert json.load(f) == {"speedup": 1.5}
+    with open(os.path.join(new_dir, check_bench.PAIRFORMER_BASELINE)) as f:
+        assert json.load(f) == {"cached_ratio": 0.9}
+    assert _run(new_dir, kernels, serve, "--neural", n,
+                "--pairformer", p) == 0
+    bare_dir = str(tmp_path / "fresh_bare")
+    assert _run(bare_dir, kernels, serve, "--update-baseline") == 0
+    assert not os.path.exists(
+        os.path.join(bare_dir, check_bench.NEURAL_BASELINE))
+    assert not os.path.exists(
+        os.path.join(bare_dir, check_bench.PAIRFORMER_BASELINE))
