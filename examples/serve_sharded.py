@@ -1,0 +1,82 @@
+"""Mesh-sharded serve stack + chunked prefill (ISSUE 7) on a (2, 2) mesh.
+
+Runs the continuous-batching engine with a ``(data, model)`` device mesh:
+the backend traces its jitted admit/chunk/decode programs under
+``use_mesh_rules`` (TP-sharded heads, DP-sharded slot rows) and places KV
+page pools along ``kv_heads`` — while the page allocator and page tables
+stay host-side. Admission is chunked: prompts land a few tokens per engine
+step, interleaved with decode, so late long arrivals never stall the
+in-flight batch.
+
+The example then PROVES the sharding is real, not cosmetic: it lowers the
+decode step against the live sharded state and asserts the compiled HLO
+contains cross-device collectives, and that outputs are bit-identical to
+a single-device engine.
+
+Runs anywhere — 4 real devices, or 4 forced host devices:
+
+    JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/serve_sharded.py
+"""
+import os
+import sys
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.dist.sharding import Rules
+from repro.models import get_model
+from repro.models.common import init_params
+from repro.serve import SamplingParams, ServeEngine
+
+assert len(jax.devices()) >= 4, \
+    f"need >= 4 devices for a (2, 2) mesh, got {len(jax.devices())}"
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+
+cfg = smoke_config("stablelm_12b")
+model = get_model(cfg)
+params = init_params(model.template(), jax.random.PRNGKey(0))
+
+PROMPTS = [13, 7, 18, 5, 26, 9]
+
+
+def run(mesh=None):
+    engine = ServeEngine(model, params, max_len=64, n_slots=4,
+                         prefill_chunk=4, page_size=4, pages_per_slot=16,
+                         mesh=mesh, rules=Rules() if mesh else None)
+    rng = np.random.default_rng(0)
+    rids = [engine.submit(
+        rng.integers(0, cfg.vocab, (n,)).astype(np.int32), 8,
+        sampling=SamplingParams(0.0, 0, seed=i))
+        for i, n in enumerate(PROMPTS)]
+    engine.run()
+    return engine, [engine.result(r) for r in rids]
+
+
+engine, outs = run(mesh)
+print(f"[sharded] {cfg.name} on mesh {dict(mesh.shape)}: "
+      f"{len(PROMPTS)} requests, chunked prefill (chunk=4)")
+print("[sharded] first request:", outs[0].tolist())
+
+# real collectives: lower the decode step against the LIVE sharded state
+be = engine.backend
+lowered = jax.jit(be._with_mesh(model.decode),
+                  static_argnames=("max_pages",)).lower(
+    params, be._cache, be._last_tok, max_pages=be.page_cap({}))
+txt = lowered.compile().as_text()
+colls = sorted(op for op in ("all-reduce", "all-gather", "reduce-scatter")
+               if op in txt)
+assert colls, "sharded decode compiled without any cross-device collective"
+print("[sharded] decode collectives:", ", ".join(colls))
+
+_, outs1 = run(mesh=None)
+assert all(a.size == b.size and (a == b).all()
+           for a, b in zip(outs, outs1)), "mesh run diverged"
+print("[sharded] outputs bit-identical to the single-device engine")

@@ -222,10 +222,21 @@ def broadcast_factors(phi: jax.Array, batch: int, seq: int, heads: int) -> jax.A
     """Broadcast a factor tensor to the canonical (B, S, H, R) layout.
 
     Accepts (S, R), (H, S, R), (B, S, H, R); returns (B, S, H, R).
+
+    A 3-D factor is ONLY interpreted as per-head (H, S, R), and only when its
+    leading dim equals ``heads`` — a (B, S, R) batch factor would previously be
+    transposed into nonsense silently whenever it happened to pass the
+    broadcast (e.g. B == S). Batch-varying factors must come in explicit 4-D
+    (B, S, H, R) / (B, S, 1, R) form.
     """
     if phi.ndim == 2:            # (S, R) — shared across batch & heads
         phi = phi[None, :, None, :]
-    elif phi.ndim == 3:          # (H, S, R) — per-head
+    elif phi.ndim == 3:          # (H, S, R) — per-head, leading dim must be H
+        if phi.shape[0] != heads:
+            raise ValueError(
+                f"3-D factor leading dim {phi.shape[0]} != heads {heads}: a "
+                f"3-D factor means per-head (H, S, R); pass batch factors as "
+                f"explicit 4-D (B, S, 1, R) or (B, S, H, R)")
         phi = phi.transpose(1, 0, 2)[None]
     elif phi.ndim != 4:
         raise ValueError(f"factor rank {phi.ndim} not in (2, 3, 4)")

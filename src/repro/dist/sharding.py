@@ -42,7 +42,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["Rules", "spec_for", "batch_axes_for", "use_mesh_rules",
-           "get_active_mesh", "constrain", "DEFAULT_RULES"]
+           "get_active_mesh", "constrain", "shard_put", "DEFAULT_RULES"]
 
 # One logical axis maps to: None (replicate) or a tuple of mesh axis names.
 MeshAxes = Optional[Tuple[str, ...]]
@@ -149,6 +149,37 @@ def batch_axes_for(batch: int, mesh, rules: Rules) -> P:
     if dp <= 1 or batch % dp != 0:
         return P(None)
     return spec
+
+
+def shard_put(x, mesh, rules: Rules, axes: Sequence[Optional[str]]):
+    """``device_put`` ``x`` with the sharding its logical ``axes`` resolve to.
+
+    One logical axis (or ``None``) per array dim. A ``"batch"`` entry is
+    guarded like ``batch_axes_for``: when the dim does not divide the DP
+    product it degrades to replicated instead of erroring — serve-path
+    state (slot batches of arbitrary ``n_slots``) must always place. This
+    is the HOST-side complement of ``constrain``: backends use it to pin
+    persistent device state (caches, pools, sampling rows) before any
+    jitted program consumes it, so jit input shardings match the
+    constraints traced inside.
+    """
+    x = jax.numpy.asarray(x)
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard_put: {len(axes)} axes for rank-{x.ndim} "
+                         f"array of shape {x.shape}")
+    entries = list(spec_for(axes, mesh, rules))
+    for i, (logical, entry) in enumerate(zip(axes, entries)):
+        if logical == "batch" and entry is not None:
+            ax = entry if isinstance(entry, tuple) else (entry,)
+            dp = math.prod(int(mesh.shape[a]) for a in ax)
+            if dp > 1 and int(x.shape[i]) % dp != 0:
+                entries[i] = None
+        elif entry is not None:        # non-divisible dims replicate too
+            ax = entry if isinstance(entry, tuple) else (entry,)
+            n = math.prod(int(mesh.shape[a]) for a in ax)
+            if n > 1 and int(x.shape[i]) % n != 0:
+                entries[i] = None
+    return jax.device_put(x, NamedSharding(mesh, P(*entries)))
 
 
 # ---------------------------------------------------------------------------

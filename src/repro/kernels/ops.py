@@ -52,7 +52,8 @@ from repro.core.attention import DEFAULT_MASK_VALUE, MaskSpec
 from repro.kernels import flash_decode as _fd
 from repro.kernels import flashbias_attn as _fa
 
-__all__ = ["flash_attention", "flash_decode", "resolve_impl", "IMPLS"]
+__all__ = ["flash_attention", "flash_chunk_attention", "flash_decode",
+           "resolve_impl", "IMPLS"]
 
 IMPLS = ("xla", "pallas", "pallas_interpret", "io_stub")
 
@@ -755,3 +756,101 @@ def _flash_decode_paged(q, k_pages, v_pages, lengths, page_table,
         qt, kt, vt, lengths, pt, pqt, pkt, slopes_g, scale=scale,
         interpret=(impl == "pallas_interpret"))
     return out[:, :, :g, :dv].reshape(b, 1, h, dv)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (C queries, offset causal mask, KV cache) — inference only
+# ---------------------------------------------------------------------------
+
+def flash_chunk_attention(
+    q: jax.Array,                        # (B, C, H, D) chunk queries
+    k_cache: jax.Array,                  # cache/pool, see kv_layout
+    v_cache: jax.Array,
+    offsets: jax.Array,                  # (B,) int32: abs position of q[:, 0]
+    chunk_lens: jax.Array,               # (B,) int32: valid queries (0=frozen)
+    slopes: Optional[jax.Array] = None,  # (H,) ALiBi
+    *,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+    kv_layout: str = "bshd",
+    page_table: Optional[jax.Array] = None,
+    max_pages: Optional[int] = None,
+) -> jax.Array:
+    """Offset-masked chunk attention for chunked prefill.
+
+    A fixed-size chunk of C queries per slot attends against the slot's KV
+    cache — the chunk's own keys must already be scattered into the cache
+    (write-then-attend), so the mask is purely positional: query i of row b
+    sits at absolute position ``q_pos = offsets[b] + i`` and sees exactly the
+    keys at positions ``<= q_pos`` (the offset causal mask; everything past
+    the row's written prefix is masked by causality). Rows with
+    ``chunk_lens[b] == 0`` are frozen lanes riding in the fixed slot batch —
+    their output is unused by construction (the model gathers logits only at
+    valid positions and freezes cache state elsewhere).
+
+    ALiBi enters as ``slopes * (k_pos - q_pos)`` from absolute positions —
+    the rank-2 factored form specialized in-place, matching
+    ``core.bias.alibi_factors(q_offset=...)`` exactly.
+
+    Layouts mirror ``flash_decode``: contiguous ``kv_layout="bhsd"`` caches
+    ``(B, KVH, S, E)`` / canonical ``(B, S, KVH, E)``; with ``page_table``
+    the caches are page pools (``(KVH, n_pages, ps, E)`` head-major or
+    ``(n_pages, ps, KVH, E)`` canonical) gathered into capped logical views
+    (``max_pages`` from the host-side length mirror, like decode).
+
+    Chunk attention is an ADMISSION-path program (runs once per chunk, not
+    per token), so every impl routes to the head-major XLA path today — the
+    decode hot path keeps its Pallas kernels. Returns (B, C, H, Dv_cache);
+    lane-padded caches yield a lane-padded Dv for the caller to slice.
+    """
+    assert kv_layout in ("bshd", "bhsd"), kv_layout
+    b, c, h, d = q.shape
+    scale = (1.0 / float(np.sqrt(d))) if scale is None else scale
+    resolve_impl(impl)                   # validate; all impls -> XLA here
+    offsets = jnp.asarray(offsets, jnp.int32)
+    chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
+
+    if page_table is not None:
+        if kv_layout == "bhsd":
+            kvh, n_pages, ps = k_cache.shape[:3]
+        else:
+            n_pages, ps, kvh = k_cache.shape[:3]
+        p_slot = page_table.shape[1]
+        p_cap = _static_page_cap(offsets + chunk_lens, ps, p_slot, max_pages)
+        pt = jnp.clip(page_table.astype(jnp.int32), 0, n_pages - 1)[:, :p_cap]
+        if kv_layout == "bhsd":
+            def view(pool):              # (KVH, B, S_view, E) -> (B, KVH, ...)
+                gth = pool[:, pt].reshape(kvh, b, p_cap * ps, pool.shape[-1])
+                return gth.transpose(1, 0, 2, 3)
+        else:
+            def view(pool):
+                gth = pool[pt].reshape(b, p_cap * ps, kvh, pool.shape[-1])
+                return gth.transpose(0, 2, 1, 3)
+        kv, vv = view(k_cache), view(v_cache)
+    elif kv_layout == "bhsd":
+        kv, vv = k_cache, v_cache        # (B, KVH, S, E) native
+    else:
+        kv = k_cache.transpose(0, 2, 1, 3)
+        vv = v_cache.transpose(0, 2, 1, 3)
+
+    kvh, s_len = kv.shape[1], kv.shape[2]
+    dv = vv.shape[-1]
+    g = h // kvh
+    kf = kv.astype(jnp.float32)
+    if kf.shape[-1] > d:                 # lane-padded pool vs raw q
+        kf = kf[..., :d]
+    qg = (q.reshape(b, c, kvh, g, d).transpose(0, 2, 3, 1, 4)
+          .astype(jnp.float32))          # (B, KVH, G, C, D): chunk-sized
+    s = jnp.einsum("bkgcd,bksd->bkgcs", qg, kf) * scale
+    k_pos = jnp.arange(s_len)
+    q_pos = offsets[:, None] + jnp.arange(c)[None, :]          # (B, C)
+    if slopes is not None:
+        rel = (k_pos[None, None] - q_pos[:, :, None]).astype(jnp.float32)
+        s = s + slopes.reshape(kvh, g)[None, :, :, None, None] \
+            * rel[:, None, None]
+    valid = k_pos[None, None] <= q_pos[:, :, None]             # (B, C, S)
+    s = jnp.where(valid[:, None, None], s, DEFAULT_MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bkse->bkgce", p, vv.astype(jnp.float32))
+    return (o.transpose(0, 3, 1, 2, 4).reshape(b, c, h, dv)
+            .astype(q.dtype))

@@ -42,9 +42,25 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="> 0: override the page-pool size (undersize it "
                          "to watch lazy growth preempt under pressure)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="> 0: chunked prefill — prompts land this many "
+                         "tokens per engine step, interleaved with decode "
+                         "(long arrivals never stall the batch)")
+    ap.add_argument("--mesh", default="",
+                    help="DxM (e.g. 2x2): serve on a (data, model) device "
+                         "mesh — TP-sharded heads/pools, DP-sharded slot "
+                         "rows; needs D*M devices (CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
     if args.pool_pages and not args.page_size:
         ap.error("--pool-pages requires --page-size (paged KV)")
+    mesh = None
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        if d * m > len(jax.devices()):
+            ap.error(f"--mesh {args.mesh} needs {d * m} devices, "
+                     f"found {len(jax.devices())}")
+        mesh = jax.make_mesh((d, m), ("data", "model"))
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
@@ -60,6 +76,10 @@ def main(argv=None):
                   page_reservation=args.page_reservation)
         if args.pool_pages:
             kw["n_pages"] = args.pool_pages
+    if args.prefill_chunk:
+        kw["prefill_chunk"] = args.prefill_chunk
+    if mesh is not None:
+        kw["mesh"] = mesh
     engine = ServeEngine(model, params, max_len=max_len,
                          n_slots=args.slots, prefill_len=args.prompt_len,
                          **kw)

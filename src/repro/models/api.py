@@ -7,6 +7,11 @@
 - ``prefill(params, batch, max_len, lengths)`` — prompt -> (logits, cache);
   ``lengths`` (B,) enables ragged right-padded prompts (logits gathered at
   each row's last valid position, state paths freeze there),
+- ``prefill_chunk(params, cache, tokens, offsets, chunk_lens, final_lens,
+  max_pages=None)`` — chunked prefill (LM families): append one fixed-size
+  chunk per slot row against the EXISTING slot cache; rows with
+  ``chunk_lens == 0`` stay bit-identical (the serve backend interleaves
+  one chunk batch with each decode step),
 - ``decode(params, cache, tokens, max_pages=None)`` — one token ->
   (logits, cache); ``max_pages`` (static) caps the pages a paged decode
   step can reference (the serve engine derives it from host-side lengths),
@@ -48,6 +53,7 @@ class Model:
     template: Callable[[], dict]
     loss: Callable
     prefill: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
     decode: Optional[Callable] = None
     init_cache: Optional[Callable] = None
     insert_cache: Optional[Callable] = None
@@ -92,6 +98,14 @@ def _lm_model(cfg: ArchConfig) -> Model:
         loss=lambda p, batch: lm.loss_fn(p, batch, cfg),
         prefill=lambda p, batch, max_len=None, lengths=None: lm.prefill(
             p, batch, cfg, max_len=max_len, lengths=lengths),
+        # chunked prefill (ISSUE 7): append a C-token chunk per slot against
+        # the EXISTING slot cache — offsets/chunk_lens/final_lens per row,
+        # chunk_lens == 0 freezes a lane (see lm.prefill_chunk's contract)
+        prefill_chunk=lambda p, cache, tokens, offsets, chunk_lens,
+            final_lens, max_pages=None: lm.prefill_chunk(
+                p, cache, tokens, cfg, offsets=offsets,
+                chunk_lens=chunk_lens, final_lens=final_lens,
+                max_pages=max_pages),
         decode=lambda p, cache, tokens, max_pages=None: lm.decode_step(
             p, cache, tokens, cfg, max_pages=max_pages),
         init_cache=lambda b, max_len, length=0: lm.init_cache(

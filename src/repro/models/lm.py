@@ -33,10 +33,10 @@ from repro.models.common import (PDef, cross_entropy_loss, embed_lookup,
                                  rmsnorm, stack_layers, swiglu,
                                  unembed_logits)
 
-__all__ = ["lm_template", "loss_fn", "prefill", "decode_step", "init_cache",
-           "init_paged_cache", "insert_cache_at_slots",
-           "insert_paged_cache_at_slots", "grow_page_tables_at_slots",
-           "forward_hidden"]
+__all__ = ["lm_template", "loss_fn", "prefill", "prefill_chunk",
+           "decode_step", "init_cache", "init_paged_cache",
+           "insert_cache_at_slots", "insert_paged_cache_at_slots",
+           "grow_page_tables_at_slots", "forward_hidden"]
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +377,151 @@ def _ring_window_attention(q, k_cache, v_cache, lengths, slopes, cfg, *,
     return o[:, None].astype(q.dtype)
 
 
+def _attention_chunk(lp: dict, x: jax.Array, k_cache, v_cache,
+                     cfg: ArchConfig, *, offsets, chunk_lens,
+                     page_table=None, max_pages=None):
+    """C-token chunk attention against a (ring / full / paged) slot cache.
+
+    Chunked prefill's attention step: row ``b``'s chunk occupies absolute
+    positions ``offsets[b] .. offsets[b]+chunk_lens[b]-1``. Rows with
+    ``chunk_lens[b] == 0`` are frozen lanes riding the fixed slot batch
+    (live decoding slots, empty slots): their KV writes drop (out-of-range
+    scatter indices, ``mode="drop"``) and their outputs are garbage nobody
+    reads — exactly the ``active`` discipline of ``_attention_decode``.
+
+    Full/paged caches scatter the chunk's keys FIRST and attend against the
+    written cache under the offset causal mask (``k_pos <= q_pos``, see
+    ``ops.flash_chunk_attention``). Ring caches must attend FIRST: a later
+    chunk position may alias the ring slot an earlier query still needs, so
+    queries read old keys from the PRE-write ring (slot validity per query:
+    in-window and written) plus the chunk's own keys (causal + local), and
+    only then does the chunk rotate into the ring — which also bounds the
+    chunk size at ``window`` (positions must land on distinct slots).
+    """
+    dt = x.dtype
+    kernel_layout = cfg.cache_layout == "kernel"
+    kv_layout = "bhsd" if kernel_layout else "bshd"
+    b, c, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, lp["wq"].astype(dt))
+    k_new = jnp.einsum("bsd,dhe->bshe", x, lp["wk"].astype(dt))
+    v_new = jnp.einsum("bsd,dhe->bshe", x, lp["wv"].astype(dt))
+    slopes = (lp["slopes"].astype(jnp.float32)
+              if cfg.bias_kind == "alibi" else None)
+    bidx = jnp.arange(b)
+    i = jnp.arange(c)
+    pos = offsets[:, None] + i[None, :]                   # (B, C) absolute
+    valid = i[None, :] < chunk_lens[:, None]              # (B, C)
+
+    def pad_rows(x_new, pool_like):
+        # (B, C, KVH, hd) -> (B, C, KVH, hd_pad): chunk-sized, like decode's
+        # one-row pad against lane-padded pools
+        pad = pool_like.shape[-1] - x_new.shape[-1]
+        if pad:
+            x_new = jnp.pad(x_new, ((0, 0),) * 3 + ((0, pad),))
+        return x_new
+
+    if page_table is not None:                            # paged full cache
+        if kernel_layout:                # (KVH, n_pages, ps, hd_pad)
+            n_pages, ps = k_cache.shape[1], k_cache.shape[2]
+        else:                            # (n_pages, ps, KVH, hd)
+            n_pages, ps = k_cache.shape[0], k_cache.shape[1]
+        page = jnp.where(valid, page_table[bidx[:, None], pos // ps], n_pages)
+        flat_pg, flat_ix = page.reshape(-1), (pos % ps).reshape(-1)
+        if kernel_layout:
+            kvh = k_new.shape[2]
+            def rows(x_new, pool):       # -> (KVH, B*C, hd_pad)
+                r = pad_rows(x_new, pool)
+                return r.transpose(2, 0, 1, 3).reshape(kvh, b * c, -1)
+            k_cache = k_cache.at[:, flat_pg, flat_ix].set(
+                rows(k_new, k_cache), mode="drop")
+            v_cache = v_cache.at[:, flat_pg, flat_ix].set(
+                rows(v_new, v_cache), mode="drop")
+        else:
+            k_cache = k_cache.at[flat_pg, flat_ix].set(
+                k_new.reshape(b * c, *k_new.shape[2:]), mode="drop")
+            v_cache = v_cache.at[flat_pg, flat_ix].set(
+                v_new.reshape(b * c, *v_new.shape[2:]), mode="drop")
+        o = kops.flash_chunk_attention(
+            q, k_cache, v_cache, offsets, chunk_lens, slopes,
+            impl=cfg.attn_impl, kv_layout=kv_layout, page_table=page_table,
+            max_pages=max_pages)
+        o = o[..., :v_new.shape[-1]]
+    elif cfg.window and cfg.window == k_cache.shape[2 if kernel_layout
+                                                    else 1]:  # ring (SWA)
+        w = cfg.window
+        assert c <= w, (c, w)            # distinct ring slots per chunk
+        h = q.shape[2]
+        e = q.shape[-1]
+        kvh = k_new.shape[2]
+        g = h // kvh
+        scale = 1.0 / np.sqrt(e)
+        # old keys from the PRE-write ring: slot s holds absolute position
+        # p_old = old_last - ((old_last - s) mod W), valid iff >= 0
+        slot = jnp.arange(w)
+        old_last = (offsets - 1)[:, None]                 # (B, 1)
+        p_old = old_last - ((old_last - slot[None, :]) % w)      # (B, W)
+        slot_written = (p_old >= 0) & (offsets[:, None] > 0)
+        qg = (q.reshape(b, c, kvh, g, e).transpose(0, 2, 3, 1, 4)
+              .astype(jnp.float32))                       # (B,KVH,G,C,E)
+        kf = k_cache if kernel_layout else k_cache.transpose(0, 2, 1, 3)
+        vf = v_cache if kernel_layout else v_cache.transpose(0, 2, 1, 3)
+        s_old = jnp.einsum("bkgce,bkwe->bkgcw", qg,
+                           kf.astype(jnp.float32)) * scale
+        kn = k_new.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B,KVH,C,E)
+        vn = v_new.transpose(0, 2, 1, 3).astype(jnp.float32)
+        s_in = jnp.einsum("bkgce,bkje->bkgcj", qg, kn) * scale
+        if slopes is not None:
+            sl = slopes.reshape(kvh, g)[None, :, :, None, None]
+            rel_old = (p_old[:, None, :] - pos[:, :, None]).astype(jnp.float32)
+            rel_in = (i[None, :] - i[:, None]).astype(jnp.float32)  # (C, C)
+            s_old = s_old + sl * rel_old[:, None, None]
+            s_in = s_in + sl * rel_in[None, None, None]
+        # query at pos p sees old keys in (p - W, offsets) and chunk keys
+        # j <= i within the window (all <= p by causality)
+        m_old = slot_written[:, None, :] \
+            & (p_old[:, None, :] > pos[:, :, None] - w)          # (B,C,W)
+        m_in = ((i[None, :] <= i[:, None]) & (i[:, None] - i[None, :] < w)
+                )[None] & (i[None, None, :] < chunk_lens[:, None, None])
+        s_all = jnp.concatenate([
+            jnp.where(m_old[:, None, None], s_old, -1e30),
+            jnp.where(m_in[:, None, None], s_in, -1e30)], axis=-1)
+        p_all = jax.nn.softmax(s_all, axis=-1)
+        o = jnp.einsum("bkgcw,bkwe->bkgce", p_all[..., :w],
+                       vf.astype(jnp.float32)) \
+            + jnp.einsum("bkgcj,bkje->bkgce", p_all[..., w:], vn)
+        o = (o.transpose(0, 3, 1, 2, 4).reshape(b, c, h, e)
+             .astype(q.dtype))
+        # rotate the chunk into the ring AFTER attending (frozen rows drop)
+        ring_slot = jnp.where(valid, pos % w, w)
+        if kernel_layout:
+            k_cache = k_cache.at[bidx[:, None], :, ring_slot].set(
+                k_new, mode="drop")
+            v_cache = v_cache.at[bidx[:, None], :, ring_slot].set(
+                v_new, mode="drop")
+        else:
+            k_cache = k_cache.at[bidx[:, None], ring_slot].set(
+                k_new, mode="drop")
+            v_cache = v_cache.at[bidx[:, None], ring_slot].set(
+                v_new, mode="drop")
+    else:                                                 # contiguous full
+        sc = k_cache.shape[2 if kernel_layout else 1]
+        pos_w = jnp.where(valid, pos, sc)
+        if kernel_layout:
+            k_cache = k_cache.at[bidx[:, None], :, pos_w].set(
+                pad_rows(k_new, k_cache), mode="drop")
+            v_cache = v_cache.at[bidx[:, None], :, pos_w].set(
+                pad_rows(v_new, v_cache), mode="drop")
+        else:
+            k_cache = k_cache.at[bidx[:, None], pos_w].set(k_new, mode="drop")
+            v_cache = v_cache.at[bidx[:, None], pos_w].set(v_new, mode="drop")
+        o = kops.flash_chunk_attention(
+            q, k_cache, v_cache, offsets, chunk_lens, slopes,
+            impl=cfg.attn_impl, kv_layout=kv_layout)
+        o = o[..., :v_new.shape[-1]]
+    y = jnp.einsum("bshe,hed->bsd", o, lp["wo"].astype(dt))
+    return y, k_cache, v_cache
+
+
 # ---------------------------------------------------------------------------
 # MoE FFN (GShard-style capacity dispatch; EP over the model axis)
 # ---------------------------------------------------------------------------
@@ -649,6 +794,59 @@ def _layer_decode(lp: dict, cache_l: dict, x: jax.Array, lengths,
     return x, new_cache
 
 
+def _layer_chunk(lp: dict, cache_l: dict, x: jax.Array, cfg: ArchConfig, *,
+                 offsets, chunk_lens, page_table=None, max_pages=None):
+    """One layer of chunked prefill: C tokens appended against the slot
+    cache. Mirrors ``_layer_decode``'s freeze discipline — rows with
+    ``chunk_lens == 0`` keep their cache bit-identical."""
+    new_cache = dict(cache_l)
+    part = chunk_lens > 0                       # participating rows
+    first = offsets == 0                        # rows starting a fresh prompt
+    h = rmsnorm(x, lp["ln1"])
+    if cfg.family in ("dense", "moe", "hybrid"):
+        paged = "pages_k" in cache_l
+        kk, vv = ("pages_k", "pages_v") if paged else ("k", "v")
+        y, kc, vc = _attention_chunk(
+            lp["attn"], h, cache_l[kk], cache_l[vv], cfg,
+            offsets=offsets, chunk_lens=chunk_lens,
+            page_table=page_table if paged else None, max_pages=max_pages)
+        new_cache[kk], new_cache[vv] = kc, vc
+    if cfg.family in ("ssm", "hybrid"):
+        # a fresh prompt starts from zero state (the slot may hold a prior
+        # occupant's state); continuation chunks carry the cached state.
+        # _ssm_forward(lengths=chunk_lens) gives padded positions dt = 0,
+        # so h_fin / conv tails land exactly after position chunk_lens-1;
+        # non-participating rows are where-frozen like decode.
+        h0 = jnp.where(first[:, None, None, None], 0.0, cache_l["ssm_h"])
+        tx0 = jnp.where(first[:, None, None, None], 0.0, cache_l["conv_x"])
+        tbc0 = jnp.where(first[:, None, None], 0.0, cache_l["conv_bc"])
+        ys, hf, tx, tbc = _ssm_forward(lp["ssm"], h, cfg, h0=h0,
+                                       conv_tail_x=tx0, conv_tail_bc=tbc0,
+                                       lengths=chunk_lens)
+        hf = jnp.where(part[:, None, None, None], hf, cache_l["ssm_h"])
+        tx = jnp.where(part[:, None, None, None], tx, cache_l["conv_x"])
+        tbc = jnp.where(part[:, None, None], tbc, cache_l["conv_bc"])
+        new_cache["ssm_h"], new_cache["conv_x"] = hf, tx
+        new_cache["conv_bc"] = tbc
+    if cfg.family in ("dense", "moe"):
+        x = x + y
+    elif cfg.family == "ssm":
+        x = x + ys
+    else:
+        x = x + 0.5 * (rmsnorm(y, lp["branch_norm_attn"])
+                       + rmsnorm(ys, lp["branch_norm_ssm"]))
+    if cfg.family == "moe":
+        valid = jnp.arange(x.shape[1])[None, :] < chunk_lens[:, None]
+        y2, _ = _moe_ffn(lp["moe"], rmsnorm(x, lp["ln2"]), cfg, valid=valid)
+        x = x + y2
+    elif cfg.family in ("dense", "hybrid"):
+        m = lp["mlp"]
+        dt = x.dtype
+        x = x + swiglu(rmsnorm(x, lp["ln2"]), m["wi"].astype(dt),
+                       m["wo"].astype(dt))
+    return x, new_cache
+
+
 def _maybe_remat(fn, cfg: ArchConfig):
     if cfg.remat == "none":
         return fn
@@ -864,6 +1062,89 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, *, max_pages=None):
     logits = unembed_logits(hid, params["embed"].astype(hid.dtype))
     new_cache.update(new_layer_cache)
     new_cache["length"] = lengths
+    return logits, new_cache
+
+
+def prefill_chunk(params, cache, tokens, cfg: ArchConfig, *, offsets,
+                  chunk_lens, final_lens, max_pages=None):
+    """One chunked-prefill step: append a C-token chunk per slot.
+
+    The chunked-prefill contract (the serve backend's planner drives this):
+
+    - ``tokens`` (B, C) int32 — one fixed-size chunk per slot row, right-
+      padded; row ``b``'s valid tokens are ``tokens[b, :chunk_lens[b]]`` and
+      land at absolute positions ``offsets[b] .. offsets[b]+chunk_lens[b]-1``
+      of the slot's cache. ``chunk_lens[b] == 0`` marks a frozen lane (a
+      live decoding slot or an empty slot riding the fixed batch): its cache
+      stays bit-identical.
+    - ``offsets[b] == 0`` starts a fresh prompt: SSM state / conv tails
+      reset to zero (the slot may hold a prior occupant's state); KV needs
+      no reset — the offset causal mask never reads past the written prefix.
+    - ``final_lens`` (B,) int32 is the post-chunk ``cache["length"]`` where
+      ``>= 0`` and "keep the current value" where negative. Mid-prompt
+      chunks pass -1 for every row: ``length`` stays 0 until the LAST chunk,
+      which keeps the lane frozen under interleaved ``decode_step`` calls
+      (the length-0 idle contract) and invisible to host-side page-growth
+      accounting. The final chunk passes the full prompt length.
+    - Returns ``(logits, cache)`` with logits (B, 1, V) gathered at each
+      row's last valid chunk position — meaningful only for final chunks
+      (the first sampled token), garbage on frozen/mid-prompt rows.
+
+    Works against every cache kind: contiguous full KV (offset scatter),
+    ring KV (pre-write window read + chunk rotation — chunk size must be
+    <= window), paged KV (scatter through the slot's page table, ``phi_k``
+    factor rows at absolute positions, gather capped by static
+    ``max_pages`` like decode), and SSM/hybrid state carry.
+    """
+    b, c = tokens.shape
+    offsets = jnp.asarray(offsets, jnp.int32)
+    chunk_lens = jnp.asarray(chunk_lens, jnp.int32)
+    final_lens = jnp.asarray(final_lens, jnp.int32)
+    x = _embed_in(params, tokens, None, cfg)
+
+    paged = "pages_k" in cache
+    page_table = cache.get("page_table")
+    leaf_keys = (("pages_k", "pages_v") if paged else ("k", "v")) \
+        + ("ssm_h", "conv_x", "conv_bc")
+    layer_cache = {k: cache[k] for k in leaf_keys if k in cache}
+
+    new_cache = dict(cache)
+    if paged and "pages_phi" in cache:
+        # layer-independent key factor rows [1, pos] for the whole chunk —
+        # written once, outside the layer scan, exactly like decode_step
+        phi_pages = cache["pages_phi"]
+        n_pages, ps, r_slab = phi_pages.shape
+        i = jnp.arange(c)
+        pos = offsets[:, None] + i[None, :]
+        valid = i[None, :] < chunk_lens[:, None]
+        page = jnp.where(valid, page_table[jnp.arange(b)[:, None], pos // ps],
+                         n_pages)
+        row = jnp.stack([jnp.ones((b, c), jnp.float32),
+                         pos.astype(jnp.float32)], axis=-1)
+        if r_slab > 2:
+            row = jnp.pad(row, ((0, 0), (0, 0), (0, r_slab - 2)))
+        phi_pages = phi_pages.at[page.reshape(-1), (pos % ps).reshape(-1)].set(
+            row.reshape(b * c, r_slab), mode="drop")
+        new_cache["pages_phi"] = phi_pages
+
+    def body(x, inp):
+        lp, cl = inp
+        x, ncl = _layer_chunk(lp, cl, x, cfg, offsets=offsets,
+                              chunk_lens=chunk_lens, page_table=page_table,
+                              max_pages=max_pages)
+        return x, ncl
+
+    x, new_layer_cache = jax.lax.scan(body, x,
+                                      (_compute_layers(params, cfg),
+                                       layer_cache),
+                                      unroll=flags.scan_unroll(cfg.n_layers))
+    hid = rmsnorm(x, params["final_norm"])
+    last = jnp.take_along_axis(
+        hid, jnp.clip(chunk_lens - 1, 0)[:, None, None], axis=1)
+    logits = unembed_logits(last, params["embed"].astype(hid.dtype))
+    new_cache.update(new_layer_cache)
+    new_cache["length"] = jnp.where(final_lens >= 0, final_lens,
+                                    cache["length"])
     return logits, new_cache
 
 

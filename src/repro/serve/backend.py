@@ -24,16 +24,18 @@ masking. See serve/README.md §Backend contract.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import Rules, shard_put, use_mesh_rules
 from repro.models.api import Model
 from repro.serve.pages import PagePool
 from repro.serve.sampling import sample_tokens
-from repro.serve.scheduler import Request
+from repro.serve.scheduler import ChunkPlan, Request
 
 __all__ = ["Backend", "TokenDecodeBackend", "PairBatchBackend"]
 
@@ -74,8 +76,33 @@ class Backend:
         """Advance every live slot one budget unit."""
         raise NotImplementedError
 
+    # -- chunked prefill (ISSUE 7) --------------------------------------
+    def prefill_pending(self) -> bool:
+        """True while admitted prompts still have chunks queued — the
+        engine then interleaves one ``prefill_step`` with each decode
+        step. Backends without chunked admission never have any."""
+        return False
+
+    def prefill_step(self) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        """Advance every pending prompt one chunk; same (emissions, mask)
+        contract as ``step`` — only slots whose FINAL chunk landed this
+        call emit (their first sampled token) and advance a budget unit."""
+        raise NotImplementedError
+
+    def pending_slots(self):
+        """Slots mid-chunked-prefill: live (they own resources and can be
+        preempted) but not yet decoding — the engine and the backend's own
+        ``step``/``growth_pending`` exclude them from decode accounting."""
+        return ()
+
     def fetch_result(self, slot: int, st) -> Optional[np.ndarray]:
         """Final non-incremental result for a finishing slot (or None)."""
+        return None
+
+    def stream_result(self, slot: int, st) -> Optional[np.ndarray]:
+        """Per-step streaming payload for non-emitting backends (engines
+        pass it to a request's ``on_token`` sink when ``emissions`` is
+        None). Token backends stream the emitted id instead."""
         return None
 
     def release(self, slot: int) -> None:
@@ -117,6 +144,29 @@ class TokenDecodeBackend(Backend):
     batch, per-request PRNG key chains, paged KV with lazy page growth.
     Every computation and its ordering is preserved from the monolithic
     engine, so behavior is bit-identical.
+
+    ``prefill_chunk`` (ISSUE 7) switches admission from whole-prompt waves
+    to CHUNKED prefill: ``admit`` becomes a pure planner (reserve pages,
+    arm sampling state, enqueue a ``ChunkPlan``) and the engine drives one
+    ``prefill_step`` — a single jitted fixed-shape (n_slots, chunk)
+    program appending one chunk per pending slot — per engine step,
+    interleaved with decode. A 4k-token arrival then costs each in-flight
+    request one chunk's latency per step instead of a whole-prompt stall.
+    Mid-prefill slots hold device length 0 (frozen for decode); the final
+    chunk flips the length to the prompt length and samples the first
+    token, so PRNG chains and decode behavior match the wave path exactly.
+    Ring-KV archs clamp the chunk to the attention window (a chunk's
+    positions must map to distinct ring slots).
+
+    ``mesh``/``rules`` (ISSUE 7) make the backend mesh-aware: every jitted
+    program traces under ``use_mesh_rules`` (so ``dist.constrain`` calls
+    in model code bind — TP-sharded heads, DP-sharded slot rows) and
+    ``ensure_state`` places persistent device state with explicit
+    shardings — KV caches and page pools along ``kv_heads``, slot-batch
+    rows along ``batch`` (dropped when ``n_slots`` does not divide DP),
+    ``pages_phi`` and page tables replicated. The page ALLOCATOR and slot
+    page lists stay host-side: planning is cheap python, only content
+    moves through collectives.
     """
 
     def __init__(self, model: Model, params: dict, max_len: int,
@@ -124,14 +174,28 @@ class TokenDecodeBackend(Backend):
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  pages_per_slot: Optional[int] = None,
-                 page_reservation: str = "lazy"):
+                 page_reservation: str = "lazy",
+                 prefill_chunk: Optional[int] = None,
+                 mesh=None, rules: Optional[Rules] = None):
         assert page_reservation in ("lazy", "whole"), page_reservation
         self.model, self.params = model, params
         self.max_len, self.n_slots = max_len, n_slots
         self.prefill_len = prefill_len
+        self.mesh = mesh
+        self.rules = (rules or Rules()) if mesh is not None else rules
         cfg = model.cfg
         self._vocab = cfg.vocab
         self._front_dim = (cfg.frontend_len, cfg.d_model)
+        if prefill_chunk is not None:
+            assert prefill_chunk >= 1, prefill_chunk
+            assert model.prefill_chunk is not None, \
+                f"{cfg.family} model has no chunked-prefill path"
+            if cfg.window and cfg.window < max_len:
+                # ring cache: a chunk's positions must land on distinct
+                # ring slots, so the chunk can never exceed the window
+                prefill_chunk = min(prefill_chunk, cfg.window)
+        self.chunk_size = prefill_chunk
+        self._pending: Dict[int, ChunkPlan] = {}
         # full-KV families must fit prompt + budget inside the slot segment
         # (contiguous mode) or inside the page pool (paged mode)
         self._bounded_cache = (cfg.family in ("dense", "moe", "hybrid")
@@ -155,17 +219,38 @@ class TokenDecodeBackend(Backend):
                 batch["frontend"] = front
             return model.prefill(p, batch, max_len=max_len, lengths=lengths)
 
-        self._prefill = jax.jit(_pf, static_argnames=("max_len",))
+        self._prefill = jax.jit(self._with_mesh(_pf),
+                                static_argnames=("max_len",))
         # max_pages is a STATIC cap on the pages a paged decode step may
         # reference: the engine passes a power-of-two rounding of its
         # host-mirrored longest live length, so the paged XLA fallback
         # gathers Θ(longest request) instead of the full page-table width
         # while recompiling at most log2(pages_per_slot) times.
-        self._decode = jax.jit(model.decode, static_argnames=("max_pages",))
-        self._insert = jax.jit(model.insert_cache)
+        self._decode = jax.jit(self._with_mesh(model.decode),
+                               static_argnames=("max_pages",))
+        self._insert = jax.jit(self._with_mesh(model.insert_cache))
         if self.paged:
-            self._insert_paged = jax.jit(model.insert_paged)
-            self._grow_tables = jax.jit(model.grow_page_table)
+            self._insert_paged = jax.jit(self._with_mesh(model.insert_paged))
+            self._grow_tables = jax.jit(self._with_mesh(
+                model.grow_page_table))
+        if self.chunk_size:
+            self._chunk = jax.jit(self._with_mesh(model.prefill_chunk),
+                                  static_argnames=("max_pages",))
+
+    def _with_mesh(self, fn):
+        """Bind ``use_mesh_rules(mesh, rules)`` around ``fn`` at TRACE
+        time, so every ``dist.constrain`` in the model body resolves
+        against the backend's mesh inside the jitted program. Identity
+        when no mesh is configured — single-device serve pays nothing."""
+        if self.mesh is None:
+            return fn
+        mesh, rules = self.mesh, self.rules
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with use_mesh_rules(mesh, rules):
+                return fn(*args, **kwargs)
+        return wrapped
 
     # -- lifecycle ------------------------------------------------------
 
@@ -182,10 +267,61 @@ class TokenDecodeBackend(Backend):
         self._topks = jnp.zeros((ns,), jnp.int32)
         self._keys = jnp.zeros((ns, 2), jnp.uint32)
         self._last_tok = jnp.zeros((ns, 1), jnp.int32)
+        self._shard_state()
+
+    def _state_axes(self) -> Dict[str, tuple]:
+        """Logical axes of every persistent cache leaf (one entry per dim).
+
+        The serve-path sharding contract: KV content shards along
+        ``kv_heads`` (TP) and slot rows along ``batch`` (DP); everything
+        host-planned — page tables, the phi position slab — replicates, so
+        the allocator never needs a collective to rewrite an int32 row.
+        SSM state shards on batch only (its head dim is padded for the
+        kernel, not for the mesh)."""
+        kernel = self.model.cfg.cache_layout == "kernel"
+        axes: Dict[str, tuple] = {
+            "length": ("batch",),
+            "ssm_h": ("layers", "batch", None, None, None),
+            "conv_x": ("layers", "batch", None, None, None),
+            "conv_bc": ("layers", "batch", None, None),
+        }
+        if self.paged:
+            pool = (("layers", "kv_heads", None, None, None) if kernel
+                    else ("layers", None, None, "kv_heads", None))
+            axes.update(pages_k=pool, pages_v=pool,
+                        page_table=(None, None),
+                        pages_phi=(None, None, None))
+        else:
+            kv = (("layers", "batch", "kv_heads", None, None) if kernel
+                  else ("layers", "batch", None, "kv_heads", None))
+            axes.update(k=kv, v=kv)
+        return axes
+
+    def _shard_state(self) -> None:
+        """Place persistent device state with explicit shardings so jit
+        input shardings agree with the constraints traced by
+        ``_with_mesh`` programs (no resharding on the first step)."""
+        if self.mesh is None:
+            return
+        mesh, rules = self.mesh, self.rules
+        axes = self._state_axes()
+        for key, a in axes.items():
+            if key in self._cache:
+                self._cache[key] = shard_put(self._cache[key], mesh, rules,
+                                             a)
+        self._temps = shard_put(self._temps, mesh, rules, ("batch",))
+        self._topks = shard_put(self._topks, mesh, rules, ("batch",))
+        self._keys = shard_put(self._keys, mesh, rules, ("batch", None))
+        self._last_tok = shard_put(self._last_tok, mesh, rules,
+                                   ("batch", None))
 
     def validate(self, req: Request) -> None:
         assert np.issubdtype(req.tokens.dtype, np.integer), \
             "token backend takes int token prompts"
+        if self.chunk_size:
+            assert req.frontend is None, \
+                "chunked prefill takes token prompts only (frontend " \
+                "embeddings ride the whole-prompt wave path)"
         if self.prefill_len is not None:
             assert req.tokens.size <= self.prefill_len, \
                 (req.tokens.size, self.prefill_len)
@@ -238,7 +374,8 @@ class TokenDecodeBackend(Backend):
         boundary. None for unpaged engines."""
         if not self.paged:
             return None
-        longest = max((st.length for st in live.values()), default=0)
+        longest = max((st.length for s, st in live.items()
+                       if s not in self._pending), default=0)
         need = max(1, -(-(longest + 1) // self.page_size))
         cap = 1
         while cap < need:
@@ -246,9 +383,12 @@ class TokenDecodeBackend(Backend):
         return min(cap, self.pages_per_slot)
 
     def growth_pending(self, live) -> List[int]:
+        # mid-chunked-prefill slots hold their full prompt reservation
+        # already and are frozen for decode — they never grow here
         ps = self.page_size
         return [s for s, st in live.items()
-                if st.length // ps >= len(self._slot_pages[s])]
+                if s not in self._pending
+                and st.length // ps >= len(self._slot_pages[s])]
 
     def grow_slots(self, growing: List[int]) -> None:
         """Allocate the next page for every growing slot and push the new
@@ -269,7 +409,16 @@ class TokenDecodeBackend(Backend):
 
     def admit(self, wave: List[Request], slots: List[int]):
         """Prefill the wave into freed slots and sample each admitted
-        request's first token from its prefill logits."""
+        request's first token from its prefill logits.
+
+        Chunked mode (``prefill_chunk``): admission is a PLANNER — reserve
+        each request's prompt pages and write its page-table row now, arm
+        its sampling state (so a mid-prefill preemption snapshots a valid
+        PRNG chain), and enqueue a ``ChunkPlan``. Nothing runs on device
+        beyond the int32 table scatter; the prompt lands chunk by chunk
+        through ``prefill_step``, and nothing emits until a final chunk."""
+        if self.chunk_size:
+            return self._plan_chunked(wave, slots)
         ns, w = self.n_slots, len(wave)
 
         # right-pad prompts; pad the wave batch to n_slots so exactly one
@@ -342,15 +491,100 @@ class TokenDecodeBackend(Backend):
         mask[slots] = True
         return self._sample(lg, mask), mask
 
+    def _plan_chunked(self, wave: List[Request], slots: List[int]):
+        """Chunked admission: reserve resources + arm sampling state, then
+        queue the prompts. Page content and phi factor rows are written by
+        the chunk program itself (write-then-attend), so only the int32
+        page-table rows move here — one fixed-shape jitted scatter."""
+        ns = self.n_slots
+        if self.paged:
+            slot_ids = np.full((ns,), ns, np.int32)
+            tables = np.full((ns, self.pages_per_slot), self.n_pages,
+                             np.int32)
+            for i, (slot, r) in enumerate(zip(slots, wave)):
+                pages = self._pool.alloc(self.admission_units(r))
+                self._slot_pages[slot] = pages
+                slot_ids[i] = slot
+                tables[i, :len(pages)] = pages
+            self._cache = self._grow_tables(self._cache,
+                                            jnp.asarray(slot_ids),
+                                            jnp.asarray(tables))
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        self._temps = self._temps.at[sl].set(jnp.asarray(
+            [r.sampling.temperature for r in wave], jnp.float32))
+        self._topks = self._topks.at[sl].set(jnp.asarray(
+            [r.sampling.top_k for r in wave], jnp.int32))
+        self._keys = self._keys.at[sl].set(jnp.stack(
+            [jax.random.PRNGKey(r.sampling.seed) if r.key_override is None
+             else jnp.asarray(r.key_override, jnp.uint32) for r in wave]))
+        for slot, r in zip(slots, wave):
+            self._pending[slot] = ChunkPlan(r)
+        return None, np.zeros((ns,), bool)
+
+    def prefill_pending(self) -> bool:
+        return bool(self._pending)
+
+    def pending_slots(self):
+        return self._pending.keys()
+
+    def _chunk_page_cap(self) -> Optional[int]:
+        """Static page cap of one chunk program: pow2-rounded pages of the
+        longest pending prefix, same doubling-boundary recompile bound as
+        the decode ``page_cap``."""
+        if not self.paged:
+            return None
+        longest = max(p.done for p in self._pending.values())
+        need = max(1, -(-longest // self.page_size))
+        cap = 1
+        while cap < need:
+            cap *= 2
+        return min(cap, self.pages_per_slot)
+
+    def prefill_step(self):
+        """Append one chunk for EVERY pending slot in a single jitted
+        fixed-shape (n_slots, chunk) program. Mid-prompt chunks keep the
+        device length at 0 (the ``final_lens`` -1 sentinel) so decode
+        freezes the lane; a final chunk sets the prompt length and its
+        logits sample the request's first token — mask marks exactly those
+        finalized slots, keeping each PRNG chain aligned with its token
+        count."""
+        ns, c = self.n_slots, self.chunk_size
+        toks = np.zeros((ns, c), np.int32)
+        offs = np.zeros((ns,), np.int32)
+        clens = np.zeros((ns,), np.int32)
+        flens = np.full((ns,), -1, np.int32)
+        finalized: List[int] = []
+        for slot, plan in self._pending.items():
+            off, chunk_toks, final = plan.next_chunk(c)
+            toks[slot, :chunk_toks.size] = chunk_toks
+            offs[slot] = off
+            clens[slot] = chunk_toks.size
+            if final:
+                flens[slot] = plan.req.prompt_len
+                finalized.append(slot)
+        cap = self._chunk_page_cap()
+        logits, self._cache = self._chunk(
+            self.params, self._cache, jnp.asarray(toks), jnp.asarray(offs),
+            jnp.asarray(clens), jnp.asarray(flens), max_pages=cap)
+        for slot in finalized:
+            del self._pending[slot]
+        mask = np.zeros((ns,), bool)
+        mask[finalized] = True
+        return self._sample(logits[:, 0], mask), mask
+
     def step(self, live):
-        """One jitted decode step over the full slot batch."""
+        """One jitted decode step over the full slot batch. Slots still
+        mid-chunked-prefill ride the batch frozen (device length 0) and
+        are EXCLUDED from the advance mask — committing their sampling
+        state here would burn a PRNG split the wave path never spends."""
         logits, self._cache = self._decode(self.params, self._cache,
                                            self._last_tok,
                                            max_pages=self.page_cap(live))
-        for st in live.values():
-            st.length += 1
         mask = np.zeros((self.n_slots,), bool)
-        mask[list(live)] = True
+        for s, st in live.items():
+            if s not in self._pending:
+                st.length += 1
+                mask[s] = True
         return self._sample(logits[:, 0], mask), mask
 
     def _sample(self, logits2d, mask: np.ndarray) -> np.ndarray:
@@ -375,6 +609,7 @@ class TokenDecodeBackend(Backend):
         that may already belong to another request), and return its
         pages."""
         self._cache["length"] = self._cache["length"].at[slot].set(0)
+        self._pending.pop(slot, None)
         if self.paged:
             self._pool.free(self._slot_pages.pop(slot))
 
@@ -384,18 +619,26 @@ class TokenDecodeBackend(Backend):
         snapshotted into ``key_override``, the slot freezes (length 0) and
         its pages return to the pool immediately. Re-prefill of prompt +
         generated reproduces the exact cache the preempted decode had
-        built — prefill/decode parity is the tested invariant."""
+        built — prefill/decode parity is the tested invariant.
+
+        A slot caught MID-CHUNKED-PREFILL has emitted nothing: its plan is
+        dropped and the original request re-queues whole (partial chunk
+        writes are dead — the lane froze at length 0 and the pages return
+        to the pool), so the resumed run is bit-identical by construction."""
         self._cache["length"] = self._cache["length"].at[slot].set(0)
+        self._pending.pop(slot, None)
         if self.paged:
             self._pool.free(self._slot_pages.pop(slot))
         req = st.req
-        gen = emitted[-st.generated:]
+        # guard the generated == 0 slice: [-0:] is the WHOLE list, and a
+        # mid-chunk preemption is exactly the case that reaches it
+        gen = emitted[-st.generated:] if st.generated else []
         return Request(
             req.rid, np.concatenate([req.tokens,
                                      np.asarray(gen, np.int32)]),
             req.max_new_tokens - st.generated, req.sampling, req.frontend,
             key_override=np.asarray(self._keys)[slot],
-            priority=req.priority)
+            priority=req.priority, on_token=req.on_token)
 
     def stats(self) -> dict:
         if not self.paged:
@@ -489,6 +732,13 @@ class PairBatchBackend(Backend):
         n = st.req.tokens.shape[0]
         return np.asarray(self._cache["s"][slot, :n], np.float32)
 
+    def stream_result(self, slot: int, st) -> np.ndarray:
+        """Per-iteration single rep for streaming sinks: the pair backend
+        emits no tokens, so ``on_token`` subscribers drain the current
+        (n_res, d_model) state after every refinement step instead of
+        waiting for retirement."""
+        return self.fetch_result(slot, st)
+
     def release(self, slot: int) -> None:
         self._cache["length"] = self._cache["length"].at[slot].set(0)
 
@@ -499,4 +749,5 @@ class PairBatchBackend(Backend):
         self._cache["length"] = self._cache["length"].at[slot].set(0)
         req = st.req
         return Request(req.rid, req.tokens, req.max_new_tokens,
-                       req.sampling, req.frontend, priority=req.priority)
+                       req.sampling, req.frontend, priority=req.priority,
+                       on_token=req.on_token)

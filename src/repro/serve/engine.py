@@ -98,6 +98,20 @@ class ServeEngine:
             None selects per-complex SVD factors at ``cfg.bias_rank``
             (``cfg.bias_mode="dense"`` caches the dense bias instead —
             the A/B baseline).
+        prefill_chunk: > 0 switches the token backend to CHUNKED prefill
+            (ISSUE 7): admission becomes planning, prompts land
+            ``prefill_chunk`` tokens per engine step interleaved with the
+            decode batch — a long arrival can never stall in-flight
+            decodes for more than one chunk's latency. None (default)
+            keeps whole-prompt admission waves, bit-identical to the
+            pre-chunking engine. Ring-KV archs clamp the chunk to the
+            attention window.
+        mesh / rules: device mesh + logical-axis rules for the token
+            backend (ISSUE 7). The backend traces every jitted program
+            under ``use_mesh_rules`` and places its persistent state with
+            explicit shardings — KV/pools along ``kv_heads``, slot rows
+            along ``batch`` — while the page allocator and tables stay
+            host-side. None serves single-device, unchanged.
     """
 
     def __init__(self, model: Model, params: dict, max_len: int = 1024,
@@ -108,7 +122,9 @@ class ServeEngine:
                  pages_per_slot: Optional[int] = None,
                  page_reservation: str = "lazy",
                  scheduler_policy: str = "fifo",
-                 factors: Optional[dict] = None):
+                 factors: Optional[dict] = None,
+                 prefill_chunk: Optional[int] = None,
+                 mesh=None, rules=None):
         assert model.prefill is not None and model.decode is not None, \
             "model is not serve-capable"
         assert page_reservation in ("lazy", "whole"), page_reservation
@@ -116,6 +132,8 @@ class ServeEngine:
         self.max_len, self.eos_id = max_len, eos_id
         self.n_slots, self.prefill_len = n_slots, prefill_len
         if model.cfg.family == "pairformer":
+            assert prefill_chunk is None and mesh is None, \
+                "chunked prefill / mesh sharding are token-backend paths"
             self.backend = PairBatchBackend(model, params, max_len=max_len,
                                             n_slots=n_slots, factors=factors)
         else:
@@ -123,7 +141,8 @@ class ServeEngine:
                 model, params, max_len=max_len, n_slots=n_slots,
                 prefill_len=prefill_len, page_size=page_size,
                 n_pages=n_pages, pages_per_slot=pages_per_slot,
-                page_reservation=page_reservation)
+                page_reservation=page_reservation,
+                prefill_chunk=prefill_chunk, mesh=mesh, rules=rules)
         if self.backend.paged:
             self.page_size = self.backend.page_size
             self.n_pages = self.backend.n_pages
@@ -169,19 +188,25 @@ class ServeEngine:
     def submit(self, tokens, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
                frontend: Optional[np.ndarray] = None,
-               priority: int = 0) -> int:
+               priority: int = 0, on_token=None) -> int:
         """Queue one request; returns its request id.
 
         ``priority`` is the request's class: higher admits before lower
         regardless of arrival order, and preemption victims are drawn from
         the lowest class first. The default 0 for every request reproduces
         the pre-class engine exactly.
+
+        ``on_token`` streams the request's progress: the engine calls it
+        once per budget unit the request advances, with the emitted token
+        id (token backend) or the backend's per-step ``stream_result``
+        (pair backend — the current single rep). The callback rides the
+        request descriptor, so it survives preemption and resume.
         """
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, np.asarray(tokens), max_new_tokens,
                       sampling or SamplingParams(), frontend,
-                      priority=priority)
+                      priority=priority, on_token=on_token)
         self.backend.validate(req)
         self._results[rid] = []
         self._done[rid] = False
@@ -216,12 +241,22 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def step(self) -> List[int]:
-        """Admit queued requests into free slots, then advance every live
-        slot one budget unit. Returns rids that finished this step."""
+        """Admit queued requests into free slots, advance every pending
+        prompt one prefill chunk, then advance every decoding slot one
+        budget unit. Returns rids that finished this step.
+
+        The chunk/decode INTERLEAVE is the chunked-prefill latency
+        contract: each engine step costs the decode batch exactly one
+        chunk program, so a long arrival's admission is amortized one
+        chunk per step instead of stalling the whole batch behind a
+        monolithic prompt prefill."""
         self._ensure_state()
         finished = []
         if self._free and len(self.scheduler):
             finished += self.admit()
+        if self.backend.prefill_pending():
+            emissions, mask = self.backend.prefill_step()
+            finished += self._commit(emissions, mask)
         if self._live:
             finished += self.decode()
         return finished
@@ -285,6 +320,9 @@ class ServeEngine:
         while the pool is dry — so the jitted step itself never
         allocates."""
         self._ensure_state()
+        pending = self.backend.pending_slots()
+        if pending and all(s in pending for s in self._live):
+            return []               # nothing decoding yet — chunks only
         if self.backend.lazy:
             # when the pool can't cover the growth, preempt lowest-
             # priority live requests (possibly a growing request itself —
@@ -402,6 +440,11 @@ class ServeEngine:
             if t is not None:
                 self._results[st.req.rid].append(t)
             st.generated += 1
+            if st.req.on_token is not None:
+                # streaming: emitted id for token backends; non-emitting
+                # backends drain their per-step output instead
+                st.req.on_token(t if t is not None
+                                else self.backend.stream_result(slot, st))
             if ((t is not None and t == self.eos_id)
                     or st.generated >= st.req.max_new_tokens):
                 res = self.backend.fetch_result(slot, st)

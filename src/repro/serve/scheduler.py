@@ -34,13 +34,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
 from repro.serve.sampling import SamplingParams
 
-__all__ = ["Request", "FIFOScheduler"]
+__all__ = ["Request", "ChunkPlan", "FIFOScheduler"]
 
 
 @dataclasses.dataclass
@@ -59,6 +59,12 @@ class Request:
 
     ``priority``: higher admits first and preempts last; 0 is the default
     class, negative classes are valid (scavenger traffic).
+
+    ``on_token``: optional streaming callback, invoked by the engine once
+    per budget unit the request advances — with the emitted token id for
+    token backends, or the backend's ``stream_result`` (e.g. the current
+    single representation) for non-emitting backends. It rides the request
+    descriptor so preemption/resume keeps the stream attached.
     """
     rid: int
     tokens: np.ndarray                        # (T,) int32 prompt | float feats
@@ -67,6 +73,7 @@ class Request:
     frontend: Optional[np.ndarray] = None     # (F, D) precomputed embeddings
     key_override: Optional[np.ndarray] = None  # (2,) uint32 resume PRNG key
     priority: int = 0
+    on_token: Optional[Callable] = None       # streaming sink (per step)
 
     def __post_init__(self):
         arr = np.asarray(self.tokens)
@@ -89,6 +96,34 @@ class Request:
     def _order(self):
         """Queue sort key: higher class first, earlier arrival within it."""
         return (-self.priority, self.rid)
+
+
+@dataclasses.dataclass
+class ChunkPlan:
+    """Host-side prefill plan of one admitted-but-not-yet-decoding request.
+
+    Chunked prefill (ISSUE 7) turns admission into planning: the backend
+    reserves the slot's resources (pages, sampling state) up front, then
+    feeds the prompt ``chunk`` tokens at a time — one chunk per engine
+    step, interleaved with the decode batch — so a long arrival never
+    stalls in-flight requests. ``done`` is the prompt prefix already in
+    the slot cache; the final chunk flips the device-side length from 0
+    (frozen lane) to the full prompt length and samples the first token.
+    """
+    req: Request
+    done: int = 0                             # prompt tokens prefilled so far
+
+    @property
+    def remaining(self) -> int:
+        return int(self.req.tokens.size) - self.done
+
+    def next_chunk(self, chunk: int):
+        """Advance the plan one chunk; returns (offset, tokens, final)."""
+        n = min(chunk, self.remaining)
+        off = self.done
+        toks = self.req.tokens[off:off + n]
+        self.done += n
+        return off, toks, self.remaining == 0
 
 
 class FIFOScheduler:

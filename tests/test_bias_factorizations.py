@@ -71,6 +71,42 @@ class TestSqDist:
         assert g.shape == (8,) and bool(jnp.all(jnp.isfinite(g)))
 
 
+class TestBroadcastFactors:
+    """(B, S, H, R) canonicalization (regression, ISSUE 7): a 3-D factor
+    is ONLY per-head (H, S, R) — the old code transposed any 3-D tensor
+    whose shape happened to broadcast, so a (B, S, R) batch factor with
+    B == S was silently scrambled into nonsense."""
+
+    def test_per_head_3d_requires_leading_heads(self):
+        heads = 4
+        phi = jax.random.normal(jax.random.PRNGKey(0), (heads, 6, 2))
+        out = bias_mod.broadcast_factors(phi, batch=3, seq=6, heads=heads)
+        assert out.shape == (3, 6, heads, 2)
+        # head h of the input lands in the head axis, not the batch axis
+        np.testing.assert_array_equal(out[0, :, 1], phi[1])
+        np.testing.assert_array_equal(out[2], out[0])    # batch-broadcast
+
+    def test_3d_with_wrong_leading_dim_raises(self):
+        # the ambiguous case: B == S == 6 used to pass the broadcast and
+        # transpose batch into heads silently
+        phi = jax.random.normal(jax.random.PRNGKey(1), (6, 6, 2))
+        with pytest.raises(ValueError, match="per-head"):
+            bias_mod.broadcast_factors(phi, batch=6, seq=6, heads=4)
+
+    def test_batch_factors_come_in_explicit_4d(self):
+        phi = jax.random.normal(jax.random.PRNGKey(2), (6, 5, 1, 2))
+        out = bias_mod.broadcast_factors(phi, batch=6, seq=5, heads=3)
+        assert out.shape == (6, 5, 3, 2)
+        np.testing.assert_array_equal(out[:, :, 2], phi[:, :, 0])
+
+    def test_2d_shared_and_bad_rank(self):
+        phi = jax.random.normal(jax.random.PRNGKey(3), (5, 2))
+        out = bias_mod.broadcast_factors(phi, batch=2, seq=5, heads=3)
+        assert out.shape == (2, 5, 3, 2)
+        with pytest.raises(ValueError, match="rank"):
+            bias_mod.broadcast_factors(phi[None, None, None], 1, 5, 3)
+
+
 class TestMultiplicativeCos:
     def test_factors_match_dense(self):
         pq, pk = bias_mod.cos_relpos_factors(9, 13)

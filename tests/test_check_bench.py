@@ -29,7 +29,8 @@ def _healthy_kernels(speedup=1.0):
             ]}
 
 
-def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0):
+def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0,
+                   chunked_ratio=2.4):
     return {
         "points": [
             {"occupancy": 1, "decode_tokens_per_s": decode / 2,
@@ -39,6 +40,10 @@ def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0):
         ],
         "lazy_vs_whole": {"occupancy": 4, "ratio": ratio},
         "layout_vs_legacy": {"occupancy": 4, "ratio": layout_ratio},
+        "chunked_prefill": {"long_prompt": 128, "chunk": 16, "steps": 24,
+                            "rounds": 3, "whole_p99_step_ms": 24.0,
+                            "chunked_p99_step_ms": 24.0 / chunked_ratio,
+                            "ratio": chunked_ratio},
     }
 
 
@@ -116,6 +121,31 @@ def test_regressed_layout_ratio_fails(files):
     near = _write(tmp / "near_l.json", _healthy_serve(layout_ratio=0.85))
     assert _run(bdir, kernels, near) == 0
     assert _run(bdir, kernels, near, "--tolerance", "0.05") == 1
+
+
+def test_regressed_chunked_prefill_ratio_fails(files):
+    """ISSUE 7 gate: chunked prefill degenerating into a monolithic
+    prefill stall (whole/chunked p99 ratio ~1.0) must fail CI. The floor
+    is structural (1.2, fixed), NOT tolerance-scaled — widening
+    --tolerance must not save it."""
+    tmp, bdir, kernels, _ = files
+    bad = _write(tmp / "bad_c.json", _healthy_serve(chunked_ratio=1.0))
+    assert _run(bdir, kernels, bad) == 1
+    assert _run(bdir, kernels, bad, "--tolerance", "0.90") == 1
+    healthy = _write(tmp / "ok_c.json", _healthy_serve(chunked_ratio=1.3))
+    assert _run(bdir, kernels, healthy) == 0
+
+
+def test_serve_only_skips_kernels_gate(files, tmp_path):
+    """--serve-only (the mesh-serve CI job) gates BENCH_serve.json without
+    a kernels artifact on disk — and still fails on serve regressions."""
+    tmp, bdir, _, serve = files
+    missing = str(tmp_path / "no_such_kernels.json")
+    assert check_bench.main(["--kernels", missing, "--serve", serve,
+                             "--baseline-dir", bdir, "--serve-only"]) == 0
+    bad = _write(tmp / "bad_so.json", _healthy_serve(chunked_ratio=1.0))
+    assert check_bench.main(["--kernels", missing, "--serve", bad,
+                             "--baseline-dir", bdir, "--serve-only"]) == 1
 
 
 def test_headline_is_sweep_point_not_small_n():

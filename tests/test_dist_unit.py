@@ -4,10 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import (Rules, batch_axes_for, constrain, get_active_mesh,
-                        spec_for, use_mesh_rules)
+                        shard_put, spec_for, use_mesh_rules)
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
@@ -121,3 +121,34 @@ class TestSpecForAxisDropping:
         # dp product is 1 -> replication regardless of batch
         assert batch_axes_for(8, mesh, r) == P(None)
         assert batch_axes_for(1, mesh, r) == P(None)
+
+
+class TestShardPut:
+    """Host-side placement of persistent serve state (ISSUE 7): one
+    logical axis per array dim, with the same divisibility degradation as
+    ``batch_axes_for`` so arbitrary n_slots / head counts always place."""
+
+    def test_places_with_resolved_spec(self):
+        # size-1 mesh axes shard trivially — the resolved spec keeps its
+        # names (no degradation needed: every dim divides 1)
+        mesh = _mesh("data", "model")
+        x = shard_put(np.zeros((4, 8)), mesh, Rules(), ("batch", "kv_heads"))
+        assert x.sharding == NamedSharding(mesh, P(("data",), ("model",)))
+
+    def test_rank_mismatch_raises(self):
+        mesh = _mesh("data", "model")
+        with pytest.raises(ValueError, match="rank-2"):
+            shard_put(np.zeros((4, 8)), mesh, Rules(), ("batch",))
+
+    def test_non_divisible_dims_degrade_to_replicated(self):
+        # a real 2-device model axis: kv_heads=3 does not divide 2 ->
+        # that dim replicates instead of erroring, divisible dims shard
+        if len(jax.devices()) < 2:
+            pytest.skip("needs 2 devices")
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        ok = shard_put(np.zeros((4, 2, 5)), mesh, Rules(),
+                       (None, "kv_heads", None))
+        assert ok.sharding.spec == P(None, ("model",), None)
+        odd = shard_put(np.zeros((4, 3, 5)), mesh, Rules(),
+                        (None, "kv_heads", None))
+        assert odd.sharding.spec == P(None, None, None)

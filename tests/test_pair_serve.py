@@ -153,6 +153,22 @@ def test_pair_request_validation():
     assert isinstance(eng.backend, PairBatchBackend)
 
 
+def test_on_token_streams_per_refinement_step():
+    """The pair backend emits no tokens, so ``submit(on_token=...)``
+    drains the per-step (n_res, d_model) state instead: one callback per
+    refinement iteration, and the final drained state IS the result."""
+    cfg, model, params = _model()
+    feats = _complexes((9,), seed=9)[0]
+    eng = ServeEngine(model, params, max_len=MAX_LEN, n_slots=1)
+    steps = []
+    rid = eng.submit(feats, 4, on_token=steps.append)
+    eng.run()
+    assert len(steps) == 4                            # one per iteration
+    assert all(s.shape == (9, cfg.d_model) for s in steps)
+    assert not np.array_equal(steps[0], steps[-1])    # rep is refined
+    np.testing.assert_array_equal(steps[-1], eng.result(rid))
+
+
 def test_priority_classes_order_admission():
     """Higher class admits first regardless of arrival; within a class the
     policy is untouched FIFO — and with all-default priorities the order
