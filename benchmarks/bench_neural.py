@@ -21,7 +21,8 @@ import numpy as np
 from benchmarks.common import Row, rows_main, time_fn
 from repro.configs import smoke_config
 from repro.core import decomp
-from repro.models import get_model, pairformer as pf_mod
+from repro.models import get_model
+from repro.models import pairformer as pf_mod
 from repro.models.common import init_params, stack_layers
 
 DEFAULT_OUT = "BENCH_neural.json"

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, time_fn
-from repro.core.attention import MaskSpec, attention
 from repro.core import bias as bias_mod
+from repro.core.attention import MaskSpec, attention
 
 HEADS, DIM, RANK = 8, 64, 8
 

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from benchmarks.common import Row, time_fn
 from repro.configs import smoke_config
 from repro.data import PDEBatches
-from repro.models import get_model, pde as pde_mod
+from repro.models import get_model
+from repro.models import pde as pde_mod
 from repro.models.common import init_params
 
 

@@ -53,9 +53,9 @@ def collect(arch: str = "stablelm_12b", n_slots: int = 8,
     kw = {}
     if page_size:
         max_len = -(-max_len // page_size) * page_size
-        kw = dict(page_size=page_size,
-                  pages_per_slot=max_len // page_size,
-                  page_reservation=page_reservation)
+        kw = {"page_size": page_size,
+              "pages_per_slot": max_len // page_size,
+              "page_reservation": page_reservation}
     engine = ServeEngine(model, params, max_len=max_len,
                          n_slots=n_slots, prefill_len=prompt_len, **kw)
     rng = np.random.default_rng(0)
@@ -315,7 +315,8 @@ def compare_chunked_prefill(arch: str = "stablelm_12b", n_slots: int = 4,
 
 def run(out_path: str = DEFAULT_OUT, smoke: bool = False):
     """benchmarks/run.py entry: emit BENCH_serve.json + CSV rows."""
-    kw = (dict(n_slots=4, prompt_len=16, steps=16, occupancies=(1, 2, 4))
+    kw = ({"n_slots": 4, "prompt_len": 16, "steps": 16,
+           "occupancies": (1, 2, 4)}
           if smoke else {})
     data = collect(**kw)
     ps = 16 if smoke else 64

@@ -17,7 +17,8 @@ import numpy as np
 from benchmarks.common import Row, time_fn
 from repro.configs import smoke_config
 from repro.core.lowrank import retained_energy
-from repro.models import get_model, swin as swin_mod
+from repro.models import get_model
+from repro.models import swin as swin_mod
 from repro.models.common import init_params
 
 

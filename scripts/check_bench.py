@@ -40,8 +40,12 @@ than ``--tolerance`` (default 30%) below its committed baseline:
    dense-bias variant) against a committed baseline as a factored-path
    regression tripwire.
 
-The opt-in gates only run when their flag is passed (CI passes them
-explicitly); default invocations keep the core kernels + serve gates.
+Every loaded BENCH file is schema-validated first (``SCHEMAS``): each gate
+reads a fixed key path, and a bench that silently stops emitting one — a
+renamed field, an empty sweep — fails the run immediately instead of
+passing vacuously. The opt-in gates only run when their flag is passed
+(CI passes them explicitly); default invocations keep the core kernels +
+serve gates.
 ``--serve-only`` drops the kernels gate entirely — the mesh-serve CI job
 runs the serve bench without a kernels sweep artifact.
 
@@ -81,6 +85,77 @@ PAIRFORMER_BASELINE = "BENCH_pairformer.baseline.json"
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+# Required key paths per BENCH suite, validated up front: "a.b" descends
+# dicts, "a[].b" requires the key on every element of a non-empty list,
+# "rows[name=X].k" requires a row dict named X carrying k. The gates below
+# read exactly these paths — a bench refactor that silently drops one
+# (renames "ratio", stops emitting sweep points) must fail the gate
+# loudly at load time, not pass vacuously or die in a KeyError mid-check.
+SCHEMAS: dict[str, tuple[str, ...]] = {
+    "kernels": (
+        "dense_vs_factored.speedup",
+        "dense_vs_factored_sweep",
+    ),
+    "serve": (
+        "points[].occupancy",
+        "points[].decode_tokens_per_s",
+        "lazy_vs_whole.ratio",
+        "layout_vs_legacy.ratio",
+        "chunked_prefill.ratio",
+    ),
+    "neural": (
+        "rows[name=table6_infer_dense_pairbias].us_per_call",
+        "rows[name=table6_infer_flashbias_neural].us_per_call",
+    ),
+    "pairformer": (
+        "factored_vs_dense.n_res",
+        "factored_vs_dense.ratio",
+        "factored_vs_dense.cached_ratio",
+    ),
+}
+
+
+def _step_into(nodes: list, step: str) -> list | None:
+    """Resolve one path step against every current node; None = missing."""
+    out: list = []
+    for node in nodes:
+        if step.endswith("[]"):
+            items = node.get(step[:-2]) if isinstance(node, dict) else None
+            if not isinstance(items, list) or not items:
+                return None
+            out.extend(items)
+        elif "[name=" in step:
+            key, _, sel = step.partition("[name=")
+            sel = sel.rstrip("]")
+            items = node.get(key) if isinstance(node, dict) else None
+            rows = [
+                r
+                for r in (items if isinstance(items, list) else [])
+                if isinstance(r, dict) and r.get("name") == sel
+            ]
+            if not rows:
+                return None
+            out.extend(rows)
+        else:
+            if not isinstance(node, dict) or step not in node:
+                return None
+            out.append(node[step])
+    return out
+
+
+def schema_errors(suite: str, bench: dict) -> list[str]:
+    """Which required key paths of ``suite`` are missing from ``bench``."""
+    errors = []
+    for path in SCHEMAS[suite]:
+        nodes: list | None = [bench]
+        for step in path.split("."):
+            nodes = _step_into(nodes, step)
+            if nodes is None:
+                errors.append(f"{suite}: missing required key path '{path}'")
+                break
+    return errors
 
 
 def kernels_speedup(bench: dict) -> float:
@@ -206,6 +281,30 @@ def main(argv=None) -> int:
     serve = _load(args.serve)
     neural = _load(args.neural) if args.neural else None
     pairformer = _load(args.pairformer) if args.pairformer else None
+
+    suites = (
+        ("kernels", kernels),
+        ("serve", serve),
+        ("neural", neural),
+        ("pairformer", pairformer),
+    )
+    schema_failures = [
+        err
+        for suite, bench in suites
+        if bench is not None
+        for err in schema_errors(suite, bench)
+    ]
+    if schema_failures:
+        for err in schema_failures:
+            print(f"[FAIL] schema: {err}", file=sys.stderr)
+        print(
+            "BENCH schema validation FAILED: a bench stopped emitting a "
+            "gated key — fix the bench (or the schema, if the rename is "
+            "intentional) before trusting any gate below",
+            file=sys.stderr,
+        )
+        return 1
+
     if args.update_baseline:
         assert kernels is not None, "--update-baseline needs the kernels file"
         update_baselines(

@@ -1,6 +1,10 @@
 """Roofline analysis: cost/memory terms from compiled HLO + collective parser."""
-from repro.analysis.roofline import (active_params, collective_bytes,
-                                     model_flops, roofline_report)
+from repro.analysis.roofline import (
+    active_params,
+    collective_bytes,
+    model_flops,
+    roofline_report,
+)
 
 __all__ = ["collective_bytes", "roofline_report", "active_params",
            "model_flops"]

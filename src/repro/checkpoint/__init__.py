@@ -1,5 +1,4 @@
 """Checkpointing: atomic manifest-based save/restore with elastic resharding."""
-from repro.checkpoint.manifest import (latest_step, restore_checkpoint,
-                                       save_checkpoint)
+from repro.checkpoint.manifest import latest_step, restore_checkpoint, save_checkpoint
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

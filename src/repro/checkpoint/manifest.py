@@ -96,7 +96,7 @@ def all_steps(directory: str):
         return []
     out = []
     for d in os.listdir(directory):
-        if d.startswith("step_") and not d.endswith(tuple([".tmp-%d" % 0])) \
+        if d.startswith("step_") and not d.endswith((".tmp-%d" % 0,)) \
                 and ".tmp-" not in d:
             try:
                 out.append(int(d.split("_")[1]))

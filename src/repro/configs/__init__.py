@@ -4,8 +4,15 @@
 are reduced same-family configs for CPU tests. ``SHAPES`` is the assigned
 input-shape set; ``cells()`` enumerates the (arch x shape) dry-run grid.
 """
-from repro.configs.base import (SHAPES, ArchConfig, ShapeSpec, cells,
-                                get_config, list_archs, smoke_config)
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    cells,
+    get_config,
+    list_archs,
+    smoke_config,
+)
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "smoke_config",
            "list_archs", "cells"]

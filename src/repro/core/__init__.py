@@ -14,11 +14,13 @@ lives at ``repro.core.attention.attention`` (and is re-exported as
 ``attention_fn``) to avoid shadowing the submodule name.
 """
 from repro.core import attention, bias, decomp, lowrank  # noqa: F401 (modules)
-from repro.core.attention import (MaskSpec, flashbias_concat_qk,
-                                  multiplicative_flashbias_attention)
+from repro.core.attention import (
+    MaskSpec,
+    flashbias_concat_qk,
+    multiplicative_flashbias_attention,
+)
 from repro.core.attention import attention as attention_fn
-from repro.core.bias import (BiasSpec, alibi_dense, alibi_factors,
-                             alibi_slopes)
+from repro.core.bias import BiasSpec, alibi_dense, alibi_factors, alibi_slopes
 from repro.core.lowrank import IOModel, energy_profile, rank_for_energy
 
 __all__ = [

@@ -73,8 +73,8 @@ class NeuralDecompParams:
     """Two 3-layer tanh MLPs: R^{C'} -> R^{H*R} (App. H Table 12)."""
     q_layers: tuple  # tuple of (w, b)
     k_layers: tuple
-    heads: int = dataclasses.field(metadata=dict(static=True), default=1)
-    rank: int = dataclasses.field(metadata=dict(static=True), default=8)
+    heads: int = dataclasses.field(metadata={"static": True}, default=1)
+    rank: int = dataclasses.field(metadata={"static": True}, default=8)
 
     def tree_flatten(self):
         return (self.q_layers, self.k_layers), (self.heads, self.rank)

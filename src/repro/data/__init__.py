@@ -4,6 +4,6 @@ Every pipeline is a pure function of (seed, step, shard); resumability and
 elasticity are by construction — any host can compute any shard of any step,
 so crash restarts and re-meshes never lose or duplicate data.
 """
-from repro.data.pipeline import LMBatches, PDEBatches, PatchBatches
+from repro.data.pipeline import LMBatches, PatchBatches, PDEBatches
 
 __all__ = ["LMBatches", "PDEBatches", "PatchBatches"]

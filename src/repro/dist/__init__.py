@@ -28,9 +28,16 @@ Typical flow (see ``launch/dryrun.py``)::
     with use_mesh_rules(mesh, rules):      # makes constrain() live
         jax.jit(step, in_shardings=...).lower(...).compile()
 """
-from repro.dist.sharding import (DEFAULT_RULES, Rules, batch_axes_for,
-                                 constrain, get_active_mesh, shard_put,
-                                 spec_for, use_mesh_rules)
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    Rules,
+    batch_axes_for,
+    constrain,
+    get_active_mesh,
+    shard_put,
+    spec_for,
+    use_mesh_rules,
+)
 
 __all__ = ["Rules", "spec_for", "batch_axes_for", "use_mesh_rules",
            "get_active_mesh", "constrain", "shard_put", "DEFAULT_RULES"]

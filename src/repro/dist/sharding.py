@@ -39,7 +39,8 @@ import threading
 from typing import Mapping, Optional, Sequence, Tuple, Union
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 __all__ = ["Rules", "spec_for", "batch_axes_for", "use_mesh_rules",
            "get_active_mesh", "constrain", "shard_put", "DEFAULT_RULES"]

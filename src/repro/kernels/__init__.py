@@ -12,8 +12,13 @@ The callables live in ``ops``: ``ops.flash_attention`` / ``ops.flash_decode``
 (re-exported here as ``flash_attention`` / ``flash_decode_op`` so the
 ``flash_decode`` *module* name stays importable).
 """
-from repro.kernels import (flash_decode, flashbias_attn, ops,  # noqa: F401
-                           ref, ssd_scan)
+from repro.kernels import (  # noqa: F401
+    flash_decode,
+    flashbias_attn,
+    ops,
+    ref,
+    ssd_scan,
+)
 from repro.kernels.ops import flash_attention
 from repro.kernels.ops import flash_decode as flash_decode_op
 

@@ -196,8 +196,9 @@ def flashbias_attention_fwd(
         in_specs.append(None)
         args.append(None)
 
-    static = dict(scale=scale, block_q=block_q, block_k=block_k,
-                  mask_kind=mask_kind, window=window, bias_mode=bias_mode)
+    static = {"scale": scale, "block_q": block_q, "block_k": block_k,
+              "mask_kind": mask_kind, "window": window,
+              "bias_mode": bias_mode}
     out_spec = pl.BlockSpec((1, 1, block_q, dv),
                             lambda b_, h_, i, j, *_: (b_, h_, i, 0))
     scratch = [

@@ -27,10 +27,10 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro import flags
-
 from repro.analysis import collective_bytes, roofline_report
 from repro.configs import SHAPES, get_config, list_archs
 from repro.configs.base import cells

@@ -71,9 +71,9 @@ def main(argv=None):
         # every request fits max_len here by construction, so cap the page
         # table at the per-slot segment footprint — the paged logical view
         # (and the XLA gather) stays the size of one contiguous segment
-        kw = dict(page_size=args.page_size,
-                  pages_per_slot=-(-max_len // args.page_size),
-                  page_reservation=args.page_reservation)
+        kw = {"page_size": args.page_size,
+              "pages_per_slot": -(-max_len // args.page_size),
+              "page_reservation": args.page_reservation}
         if args.pool_pages:
             kw["n_pages"] = args.pool_pages
     if args.prefill_chunk:

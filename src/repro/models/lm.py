@@ -23,15 +23,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import flags
 from repro.configs.base import ArchConfig
 from repro.dist import sharding as dshard
 from repro.dist.sharding import constrain
 from repro.kernels import ops as kops
-from repro import flags
 from repro.models import ssd
-from repro.models.common import (PDef, cross_entropy_loss, embed_lookup,
-                                 rmsnorm, stack_layers, swiglu,
-                                 unembed_logits)
+from repro.models.common import (
+    PDef,
+    cross_entropy_loss,
+    embed_lookup,
+    rmsnorm,
+    stack_layers,
+    swiglu,
+    unembed_logits,
+)
 
 __all__ = ["lm_template", "loss_fn", "prefill", "prefill_chunk",
            "decode_step", "init_cache", "init_paged_cache",

@@ -23,10 +23,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-
-from repro import flags
 import numpy as np
 
+from repro import flags
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import constrain
 from repro.kernels import ops as kops

@@ -16,10 +16,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-
-from repro import flags
 import numpy as np
 
+from repro import flags
 from repro.configs.base import ArchConfig
 from repro.core.bias import sqdist_factors
 from repro.kernels import ops as kops

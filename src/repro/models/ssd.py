@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from repro import flags
-
 from repro.dist import sharding as dshard
 
 __all__ = ["ssd_scan", "ssd_decode_step"]

@@ -19,10 +19,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-
-from repro import flags
 import numpy as np
 
+from repro import flags
 from repro.configs.base import ArchConfig
 from repro.core import decomp
 from repro.kernels import ops as kops

@@ -3,8 +3,7 @@
 See README.md in this directory for the slot/cache/scheduler contract and
 the request lifecycle.
 """
-from repro.serve.backend import (Backend, PairBatchBackend,
-                                 TokenDecodeBackend)
+from repro.serve.backend import Backend, PairBatchBackend, TokenDecodeBackend
 from repro.serve.engine import ServeEngine
 from repro.serve.pages import PagePool
 from repro.serve.sampling import SamplingParams, sample_tokens

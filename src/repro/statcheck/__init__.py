@@ -1,0 +1,33 @@
+"""repro.statcheck — static contracts for the FlashBias serve stack.
+
+Three layers (see README.md for the rule catalog):
+
+1. :mod:`repro.statcheck.jaxpr_rules` + :mod:`repro.statcheck.contracts`
+   — trace every jitted serve program per cache family and walk the
+   closed jaxprs: no Θ(pool) relayout in the decode step (ISSUE 5), no
+   host callback inside jit, the Eq. 3 single-matmul fold on the
+   precision-free factored-bias path, bounded recompile keys.
+2. :mod:`repro.statcheck.mesh_rules` — compile programs under a mesh and
+   assert real collectives in the HLO, logical axes within the ``Rules``
+   vocabulary, and no silent ``shard_put`` degradation of pool leaves.
+3. :mod:`repro.statcheck.hostlint` — stdlib-only AST lint of the
+   host/device split (no ``jnp`` in allocator/scheduler code, no hidden
+   per-step syncs, clamped Pallas BlockSpec index maps).
+
+Driven by ``scripts/run_statcheck.py`` (CI: the ``static-contracts``
+job). Heavy jax imports are deferred to the submodules so the AST lint
+stays importable in environments without jax.
+"""
+from repro.statcheck.jaxpr_rules import (
+    Finding,
+    count_primitive,
+    eq3_fold_present,
+    no_host_callback,
+    no_pool_relayout,
+    pool_threshold_for,
+    walk_eqns,
+)
+
+__all__ = ["Finding", "count_primitive", "eq3_fold_present",
+           "no_host_callback", "no_pool_relayout", "pool_threshold_for",
+           "walk_eqns"]

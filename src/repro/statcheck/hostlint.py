@@ -1,0 +1,278 @@
+"""AST lint for the host/device split — stdlib-only, no jax import.
+
+The serve engine's throughput story depends on a discipline no type
+checker sees: the REQUEST-shaped side (page allocator, scheduler, engine
+core) is pure host Python/NumPy, and the DEVICE-shaped side (backend
+programs) is jit-compiled jax. A stray ``jnp`` in the allocator turns an
+O(1) bookkeeping step into a device dispatch (and a sync, if anything
+reads it back); a ``block_until_ready`` in the engine loop serializes the
+pipelined decode steps the engine exists to overlap. These are one-line
+mistakes that survive every unit test.
+
+Three rules, suppressible per line with ``# statcheck: allow(<rule>)``:
+
+- ``host-jnp`` — ``jax``/``jax.numpy`` usage in host-side modules
+  (``serve/pages.py``, ``serve/scheduler.py``, ``serve/engine.py``).
+  Sharding moves cache bytes, never allocator arithmetic.
+- ``host-sync`` — ``.block_until_ready()`` anywhere in ``serve/``
+  (the engine must stay dispatch-only; benchmarks time, engines don't),
+  and ``np.asarray``/``jax.device_get`` applied to device state
+  (``self._cache``-rooted expressions or names like ``logits``) inside a
+  ``for``/``while`` loop body — a hidden per-iteration device sync.
+- ``blockspec-bounds`` — a Pallas ``BlockSpec`` index map that reads a
+  scalar-prefetch ref (``*_ref`` parameter subscript) must clamp the
+  result (``jnp.minimum``/``maximum``/``clip``) before returning block
+  indices: an unclamped page-table lookup faults on stale tables instead
+  of aliasing the previous block (see ``kernels/flash_decode.py``).
+
+This module intentionally imports nothing beyond the stdlib so the CI
+lint job (which installs only ruff, not jax) can run it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, List, Set, Tuple
+
+__all__ = ["LintFinding", "lint_file", "lint_tree", "HOST_MODULES",
+           "SERVE_MODULES", "KERNEL_MODULES"]
+
+# modules that must never touch jax: request/page/schedule bookkeeping
+HOST_MODULES = (
+    os.path.join("src", "repro", "serve", "pages.py"),
+    os.path.join("src", "repro", "serve", "scheduler.py"),
+    os.path.join("src", "repro", "serve", "engine.py"),
+)
+# modules where the host-sync rules apply (device code allowed)
+SERVE_MODULES = (
+    os.path.join("src", "repro", "serve", "backend.py"),
+    os.path.join("src", "repro", "serve", "sampling.py"),
+) + HOST_MODULES
+# modules where BlockSpec index maps are audited
+KERNEL_MODULES = (
+    os.path.join("src", "repro", "kernels", "flash_decode.py"),
+    os.path.join("src", "repro", "kernels", "flashbias_attn.py"),
+    os.path.join("src", "repro", "kernels", "ssd_scan.py"),
+)
+
+_ALLOW_RE = re.compile(r"#\s*statcheck:\s*allow\(([\w-]+)\)")
+
+# names whose np.asarray()/device_get() inside a loop is a per-iteration
+# device->host sync (heuristic: device-state roots used by the backends)
+_DEVICE_ROOTS = ("_cache", "logits", "emissions")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.path}:{self.line}: {self.message}"
+
+
+def _suppressed(source_lines: List[str], line: int, rule: str) -> bool:
+    if 1 <= line <= len(source_lines):
+        m = _ALLOW_RE.search(source_lines[line - 1])
+        if m and m.group(1) == rule:
+            return True
+    return False
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for nested Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _jax_aliases(tree: ast.Module) -> Set[str]:
+    """Local names bound to jax or jax.numpy by imports."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "jax" or alias.name.startswith("jax."):
+                    names.add(alias.asname or alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and (node.module == "jax"
+                                or node.module.startswith("jax.")):
+                for alias in node.names:
+                    names.add(alias.asname or alias.name)
+    return names
+
+
+def _check_host_jnp(tree: ast.Module, path: str,
+                    lines: List[str]) -> List[LintFinding]:
+    findings = []
+    aliases = _jax_aliases(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            mod = (node.names[0].name if isinstance(node, ast.Import)
+                   else node.module or "")
+            if mod == "jax" or mod.startswith("jax."):
+                if not _suppressed(lines, node.lineno, "host-jnp"):
+                    findings.append(LintFinding(
+                        "host-jnp", path, node.lineno,
+                        f"host-side module imports '{mod}' — allocator/"
+                        "scheduler arithmetic must stay Python/NumPy"))
+        elif isinstance(node, ast.Name) and node.id in aliases:
+            if isinstance(node.ctx, ast.Load) \
+                    and not _suppressed(lines, node.lineno, "host-jnp"):
+                findings.append(LintFinding(
+                    "host-jnp", path, node.lineno,
+                    f"host-side module uses jax-bound name "
+                    f"'{node.id}' — a device dispatch in bookkeeping "
+                    "code"))
+    return findings
+
+
+def _loop_spans(tree: ast.Module) -> List[Tuple[int, int]]:
+    spans = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.While)):
+            end = getattr(node, "end_lineno", node.lineno)
+            spans.append((node.lineno, end))
+    return spans
+
+
+def _in_spans(line: int, spans: List[Tuple[int, int]]) -> bool:
+    return any(lo <= line <= hi for lo, hi in spans)
+
+
+def _check_host_sync(tree: ast.Module, path: str,
+                     lines: List[str]) -> List[LintFinding]:
+    findings = []
+    spans = _loop_spans(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func)
+        if callee.endswith(".block_until_ready"):
+            if not _suppressed(lines, node.lineno, "host-sync"):
+                findings.append(LintFinding(
+                    "host-sync", path, node.lineno,
+                    "block_until_ready in serve code serializes the "
+                    "dispatch pipeline (benchmarks time; engines "
+                    "don't)"))
+            continue
+        if callee in ("np.asarray", "numpy.asarray", "jax.device_get"):
+            arg_src = "".join(_dotted(a) or ast.dump(a)
+                              for a in node.args[:1])
+            device_ish = any(root in arg_src for root in _DEVICE_ROOTS)
+            if device_ish and _in_spans(node.lineno, spans) \
+                    and not _suppressed(lines, node.lineno, "host-sync"):
+                findings.append(LintFinding(
+                    "host-sync", path, node.lineno,
+                    f"{callee} on device state inside a loop — a "
+                    "device->host sync per iteration"))
+    return findings
+
+
+def _returns_tuple(fn: ast.AST) -> bool:
+    if isinstance(fn, ast.Lambda):
+        return isinstance(fn.body, ast.Tuple)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value,
+                                                       ast.Tuple):
+            return True
+    return False
+
+
+def _ref_params(fn: ast.AST) -> Set[str]:
+    args = fn.args
+    names = [a.arg for a in args.args + args.posonlyargs
+             + args.kwonlyargs]
+    return {n for n in names if n.endswith("_ref")}
+
+
+def _subscripted_names(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) and isinstance(node.value,
+                                                          ast.Name):
+            out.add(node.value.id)
+    return out
+
+
+def _has_clamp(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            if callee.split(".")[-1] in ("minimum", "maximum", "clip"):
+                return True
+    return False
+
+
+def _check_blockspec_bounds(tree: ast.Module, path: str,
+                            lines: List[str]) -> List[LintFinding]:
+    """Index-map-shaped functions (return a tuple of block indices) that
+    subscript a ``*_ref`` parameter must clamp — kernel BODIES also take
+    refs but never return tuples, so they are naturally exempt."""
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.Lambda)):
+            continue
+        if not _returns_tuple(node):
+            continue
+        refs = _ref_params(node)
+        if not refs or not (_subscripted_names(node) & refs):
+            continue
+        if _has_clamp(node):
+            continue
+        if _suppressed(lines, node.lineno, "blockspec-bounds"):
+            continue
+        name = getattr(node, "name", "<lambda>")
+        findings.append(LintFinding(
+            "blockspec-bounds", path, node.lineno,
+            f"index map '{name}' reads a scalar-prefetch ref without "
+            "clamping (jnp.minimum/clip): a stale page table would "
+            "index out of the pool instead of aliasing the previous "
+            "block"))
+    return findings
+
+
+def lint_file(path: str, *, host: bool = False, serve: bool = False,
+              kernel: bool = False) -> List[LintFinding]:
+    with open(path) as f:
+        source = f.read()
+    tree = ast.parse(source, filename=path)
+    lines = source.splitlines()
+    findings: List[LintFinding] = []
+    if host:
+        findings += _check_host_jnp(tree, path, lines)
+    if serve:
+        findings += _check_host_sync(tree, path, lines)
+    if kernel:
+        findings += _check_blockspec_bounds(tree, path, lines)
+    return findings
+
+
+def lint_tree(root: str,
+              host_modules: Iterable[str] = HOST_MODULES,
+              serve_modules: Iterable[str] = SERVE_MODULES,
+              kernel_modules: Iterable[str] = KERNEL_MODULES,
+              ) -> List[LintFinding]:
+    """Run every AST rule over its module set, rooted at ``root`` (the
+    repo checkout). Missing files are skipped: the lint must not couple
+    CI to the exact module list of older/newer trees."""
+    host = {os.path.join(root, m) for m in host_modules}
+    serve = {os.path.join(root, m) for m in serve_modules}
+    kernel = {os.path.join(root, m) for m in kernel_modules}
+    findings: List[LintFinding] = []
+    for path in sorted(host | serve | kernel):
+        if not os.path.exists(path):
+            continue
+        findings += lint_file(path, host=path in host,
+                              serve=path in serve,
+                              kernel=path in kernel)
+    return findings

@@ -1,0 +1,191 @@
+"""Sharding + compiled-HLO checks for mesh-aware serve programs.
+
+``examples/serve_sharded.py`` proves its mesh is real (not cosmetic) by
+lowering the decode step against the live sharded state and asserting the
+compiled HLO contains cross-device collectives. These helpers generalize
+that ad-hoc assert into reusable checkers that any program / any mesh can
+run, plus two static audits of the sharding metadata itself:
+
+- ``check_collectives``: compile a program under ``use_mesh_rules`` and
+  assert the expected all-reduce / all-gather family actually appears in
+  the HLO text — the difference between "the constrain annotations bound"
+  and "XLA silently replicated everything".
+- ``check_state_axes``: every logical axis a module annotates its state
+  with must exist in the active ``Rules`` vocabulary — an unknown name
+  silently resolves to replicated, which is exactly the failure mode a
+  static check can catch and a benchmark cannot.
+- ``check_shard_divisibility``: ``shard_put`` degrades non-divisible dims
+  to replicated BY DESIGN (serve state must always place); this audit
+  reports which (leaf, dim) pairs would degrade on a given mesh so the
+  degradation is a decision, never a surprise.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.dist.sharding import Rules, spec_for, use_mesh_rules
+from repro.statcheck.jaxpr_rules import Finding
+
+__all__ = [
+    "COLLECTIVE_OPS",
+    "check_collectives",
+    "check_shard_divisibility",
+    "check_state_axes",
+    "compiled_collectives",
+    "hlo_text",
+]
+
+# the cross-device ops a TP/DP-sharded program must contain at least one of
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "collective-permute", "all-to-all")
+
+
+def hlo_text(jitted, *args, mesh=None, rules: Optional[Rules] = None,
+             **kwargs) -> str:
+    """Compiled HLO of ``jitted(*args, **kwargs)``, traced under
+    ``use_mesh_rules(mesh, rules)`` when a mesh is given (so ``constrain``
+    annotations in model code bind exactly as the serve backend's
+    ``_with_mesh`` programs do)."""
+    if mesh is not None:
+        with use_mesh_rules(mesh, rules or Rules()):
+            lowered = jitted.lower(*args, **kwargs)
+    else:
+        lowered = jitted.lower(*args, **kwargs)
+    return lowered.compile().as_text()
+
+
+def compiled_collectives(txt: str,
+                         ops: Sequence[str] = COLLECTIVE_OPS) -> List[str]:
+    """Which collective op names appear in compiled HLO text."""
+    return sorted(op for op in ops if op in txt)
+
+
+def check_collectives(txt: str, *, program: str,
+                      expect_any: Sequence[str] = COLLECTIVE_OPS,
+                      expect_all: Sequence[str] = (),
+                      forbid: Sequence[str] = ()) -> List[Finding]:
+    """Assert collective presence/absence in compiled HLO text.
+
+    ``expect_any`` (default: any cross-device collective) guards against
+    cosmetic sharding; ``expect_all`` pins specific ops a program is known
+    to need (e.g. the TP head contraction's all-reduce); ``forbid`` bans
+    ops a program must never emit (e.g. no collective in a host-planned
+    page-table scatter).
+    """
+    found = compiled_collectives(txt)
+    findings = []
+    if expect_any and not any(op in found for op in expect_any):
+        findings.append(Finding(
+            rule="mesh-collectives", program=program,
+            message=(f"compiled HLO contains none of {tuple(expect_any)} — "
+                     "the mesh sharding is cosmetic (constrain annotations "
+                     "did not bind, or XLA replicated the program)")))
+    for op in expect_all:
+        if op not in found:
+            findings.append(Finding(
+                rule="mesh-collectives", program=program,
+                message=f"expected collective '{op}' missing from "
+                        f"compiled HLO (found: {found or 'none'})"))
+    for op in forbid:
+        if op in found:
+            findings.append(Finding(
+                rule="mesh-collectives", program=program,
+                message=f"forbidden collective '{op}' present in "
+                        "compiled HLO"))
+    return findings
+
+
+def check_state_axes(axes_map: Dict[str, Tuple[Optional[str], ...]],
+                     rules: Rules, *, program: str,
+                     extra_vocab: Iterable[str] = ()) -> List[Finding]:
+    """Every logical axis name in ``axes_map`` (leaf -> per-dim logical
+    axes, e.g. ``TokenDecodeBackend._state_axes()``) must be part of the
+    ``Rules`` vocabulary. An unknown name is not an error at runtime —
+    ``Rules.mesh_axes`` resolves it to replicated — which is why a typo
+    ('kv_head' for 'kv_heads') silently un-shards a pool and only a
+    static check catches it."""
+    vocab = set(rules.table) | set(extra_vocab)
+    findings = []
+    for leaf, axes in axes_map.items():
+        for d, logical in enumerate(axes):
+            if logical is not None and logical not in vocab:
+                findings.append(Finding(
+                    rule="state-axes-vocab", program=program,
+                    message=(f"cache leaf '{leaf}' dim {d} names unknown "
+                             f"logical axis '{logical}' (vocabulary: "
+                             f"{sorted(vocab)}) — it would silently "
+                             "replicate")))
+    return findings
+
+
+def shard_degradations(shapes: Dict[str, Tuple[int, ...]],
+                       axes_map: Dict[str, Tuple[Optional[str], ...]],
+                       mesh, rules: Rules) -> List[Tuple[str, int, str]]:
+    """(leaf, dim, logical-axis) triples where ``shard_put`` would degrade
+    the dim to replicated on ``mesh`` because the dim size does not divide
+    the mesh-axis product (mirrors ``shard_put``'s guard exactly)."""
+    out = []
+    for leaf, shape in shapes.items():
+        axes = axes_map.get(leaf)
+        if axes is None:
+            continue
+        spec = spec_for(axes, mesh, rules)
+        for d, (logical, entry) in enumerate(zip(axes, spec)):
+            if entry is None:
+                continue
+            ax = entry if isinstance(entry, tuple) else (entry,)
+            n = math.prod(int(mesh.shape[a]) for a in ax)
+            if n > 1 and int(shape[d]) % n != 0:
+                out.append((leaf, d, str(logical)))
+    return out
+
+
+def check_shard_divisibility(shapes: Dict[str, Tuple[int, ...]],
+                             axes_map: Dict[str, Tuple[Optional[str], ...]],
+                             mesh, rules: Rules, *, program: str,
+                             allow: Iterable[str] = ("length",),
+                             ) -> List[Finding]:
+    """Fail when a leaf OUTSIDE ``allow`` would lose its sharding to the
+    ``shard_put`` divisibility guard. Slot-batch rows (``length``,
+    sampling state) may legitimately degrade — an odd ``n_slots`` is
+    supported — but a KV pool degrading to replicated multiplies serve
+    HBM by the TP degree and must be a deliberate choice."""
+    allowed = set(allow)
+    findings = []
+    for leaf, dim, logical in shard_degradations(shapes, axes_map, mesh,
+                                                 rules):
+        if leaf in allowed:
+            continue
+        findings.append(Finding(
+            rule="shard-divisibility", program=program,
+            message=(f"cache leaf '{leaf}' dim {dim} (logical "
+                     f"'{logical}') does not divide its mesh axes on "
+                     f"{dict(mesh.shape)} — shard_put would silently "
+                     "replicate a pool-sized leaf")))
+    return findings
+
+
+def check_backend_mesh(backend, *, program: str = "decode",
+                       expect_any: Sequence[str] = COLLECTIVE_OPS,
+                       ) -> List[Finding]:
+    """The serve_sharded assert, generalized: compile the live backend's
+    decode step under its own mesh and run all three mesh rules — real
+    collectives in the HLO, state axes within the Rules vocabulary, and
+    no silent pool degradation. The backend must be mesh-configured and
+    ``ensure_state``-ed."""
+    assert backend.mesh is not None, "backend has no mesh configured"
+    backend.ensure_state()
+    axes_map = {k: v for k, v in backend._state_axes().items()
+                if k in backend._cache}
+    findings = check_state_axes(axes_map, backend.rules, program=program)
+    shapes = {k: tuple(backend._cache[k].shape) for k in axes_map}
+    findings += check_shard_divisibility(
+        shapes, axes_map, backend.mesh, backend.rules, program=program,
+        allow=("length", "ssm_h", "conv_x", "conv_bc"))
+    txt = hlo_text(backend._decode, backend.params, backend._cache,
+                   backend._last_tok,
+                   max_pages=backend.page_cap({}))
+    findings += check_collectives(txt, program=program,
+                                  expect_any=expect_any)
+    return findings

@@ -214,7 +214,7 @@ class TestPagedGatherCap:
         pt_exact = jnp.arange(B)[:, None] * p + jnp.arange(p)[None]
         pt_wide = jnp.concatenate(
             [pt_exact, jnp.full((B, 13), 10_000, jnp.int32)], axis=1)
-        kw = dict(slopes=slopes, impl="xla", kv_layout=kv_layout)
+        kw = {"slopes": slopes, "impl": "xla", "kv_layout": kv_layout}
         want = ops.flash_decode(q, kp, vp, lengths, page_table=pt_exact, **kw)
         got = ops.flash_decode(q, kp, vp, lengths, page_table=pt_wide, **kw)
         np.testing.assert_array_equal(np.asarray(want), np.asarray(got))

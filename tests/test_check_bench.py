@@ -249,6 +249,75 @@ def test_pairformer_headline_is_largest_n_res():
     assert head["ratio"] == pytest.approx(1.2)
 
 
+def test_schema_missing_gated_key_fails(files):
+    """A bench that silently drops a gated key (here: layout_vs_legacy
+    loses 'ratio') must fail the schema gate loudly, not pass vacuously
+    or die in a KeyError mid-check."""
+    tmp, bdir, kernels, _ = files
+    broken = _healthy_serve()
+    del broken["layout_vs_legacy"]["ratio"]
+    s = _write(tmp / "noratio.json", broken)
+    assert _run(bdir, kernels, s) == 1
+    errs = check_bench.schema_errors("serve", broken)
+    assert errs == ["serve: missing required key path 'layout_vs_legacy.ratio'"]
+
+
+def test_schema_empty_points_fails(files):
+    """An empty sweep satisfies max()-free code paths nowhere — 'points[]'
+    requires a non-empty list with the gated keys on every element."""
+    tmp, bdir, kernels, _ = files
+    broken = _healthy_serve()
+    broken["points"] = []
+    s = _write(tmp / "nopoints.json", broken)
+    assert _run(bdir, kernels, s) == 1
+    partial = _healthy_serve()
+    del partial["points"][0]["decode_tokens_per_s"]
+    s2 = _write(tmp / "partial.json", partial)
+    assert _run(bdir, kernels, s2) == 1
+
+
+def test_schema_named_row_missing_fails(files):
+    """--neural schema pins the two Table 6 rows by NAME: a rename breaks
+    the gate's row lookup, so it must fail at validation."""
+    tmp, bdir, kernels, serve = files
+    broken = _healthy_neural()
+    broken["rows"][1]["name"] = "table6_infer_flashbias_renamed"
+    n = _write(tmp / "renamed.json", broken)
+    assert _run(bdir, kernels, serve, "--neural", n) == 1
+    errs = check_bench.schema_errors("neural", broken)
+    assert len(errs) == 1 and "table6_infer_flashbias_neural" in errs[0]
+
+
+def test_schema_kernels_missing_sweep_fails(files):
+    tmp, bdir, _, serve = files
+    broken = _healthy_kernels()
+    del broken["dense_vs_factored_sweep"]
+    k = _write(tmp / "nosweep.json", broken)
+    assert _run(bdir, k, serve) == 1
+
+
+def test_schema_validates_before_update_baseline(files, tmp_path):
+    """--update-baseline must not commit baselines read from a malformed
+    bench file."""
+    tmp, _, kernels, _ = files
+    broken = _healthy_serve()
+    del broken["chunked_prefill"]
+    s = _write(tmp / "nochunk.json", broken)
+    new_dir = str(tmp_path / "fresh_schema")
+    assert _run(new_dir, kernels, s, "--update-baseline") == 1
+    assert not os.path.exists(os.path.join(new_dir, check_bench.SERVE_BASELINE))
+
+
+def test_schema_healthy_payloads_clean():
+    for suite, payload in (
+        ("kernels", _healthy_kernels()),
+        ("serve", _healthy_serve()),
+        ("neural", _healthy_neural()),
+        ("pairformer", _healthy_pairformer()),
+    ):
+        assert check_bench.schema_errors(suite, payload) == []
+
+
 def test_update_baseline_writes_opt_in_files(files, tmp_path):
     """--update-baseline with the opt-in flags also refreshes the neural
     and pairformer baselines; without the flags it leaves them unwritten."""

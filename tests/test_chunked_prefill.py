@@ -93,7 +93,7 @@ def test_chunk_plan_walks_the_prompt():
 ])
 def test_chunked_matches_whole_prompt_engine(arch, paged):
     cfg, model, params = _model(arch)
-    kw = dict(max_len=48, n_slots=3)
+    kw = {"max_len": 48, "n_slots": 3}
     if paged:
         kw.update(page_size=4, pages_per_slot=12)
     prompts = _prompts(cfg, (13, 6, 17, 9, 5), seed=2)
@@ -114,7 +114,7 @@ def test_chunked_ring_kv_prompt_longer_than_window():
     wrap the ring mid-prefill exactly like the whole-prompt path."""
     cfg, model, params = _model("hymba_15b")
     assert cfg.window and cfg.window < 48     # ring is actually engaged
-    kw = dict(max_len=48, n_slots=2)
+    kw = {"max_len": 48, "n_slots": 2}
     prompts = _prompts(cfg, (36, 10, 21), seed=5)   # 36 > window
     whole = _traffic(ServeEngine(model, params, **kw), prompts)
     chunked = _traffic(
@@ -129,7 +129,7 @@ def test_chunked_sampled_prng_chain_parity(paged):
     decoding slots, so the per-request PRNG chain advances identically
     whether the prompt landed whole or in chunks."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=48, n_slots=3)
+    kw = {"max_len": 48, "n_slots": 3}
     if paged:
         kw.update(page_size=4, pages_per_slot=12)
     prompts = _prompts(cfg, (12, 7, 15, 6), seed=3)

@@ -4,10 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
-from repro.dist import (Rules, batch_axes_for, constrain, get_active_mesh,
-                        shard_put, spec_for, use_mesh_rules)
+from repro.dist import (
+    Rules,
+    batch_axes_for,
+    constrain,
+    get_active_mesh,
+    shard_put,
+    spec_for,
+    use_mesh_rules,
+)
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 

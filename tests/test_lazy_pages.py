@@ -15,8 +15,7 @@ import pytest
 from repro.configs import smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
-from repro.serve import (FIFOScheduler, PagePool, Request, SamplingParams,
-                         ServeEngine)
+from repro.serve import FIFOScheduler, PagePool, Request, SamplingParams, ServeEngine
 
 
 def _model(arch):
@@ -157,7 +156,7 @@ def test_preemption_frees_pages_for_lowest_index_reuse():
 
 def test_whole_reservation_mode_never_grows_or_preempts():
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=32, n_slots=2, prefill_len=10, page_size=8)
+    kw = {"max_len": 32, "n_slots": 2, "prefill_len": 10, "page_size": 8}
     prompts = _prompts(cfg, (7, 9), seed=2)
     eng = ServeEngine(model, params, page_reservation="whole", **kw)
     out_whole = eng.generate(prompts, 8)
@@ -173,7 +172,7 @@ def test_lazy_admits_where_whole_reservation_starves():
     a 3-page pool: whole-request reservation serializes them (occupancy
     never exceeds 1) while lazy growth runs them concurrently."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=32, n_slots=2, prefill_len=6, page_size=8, n_pages=3)
+    kw = {"max_len": 32, "n_slots": 2, "prefill_len": 6, "page_size": 8, "n_pages": 3}
     prompts = _prompts(cfg, (4, 4), seed=3)
 
     def max_occ(reservation):
@@ -202,7 +201,7 @@ def test_preempted_equals_alone_full_kv_auto():
     sampled one resuming from its PRNG key snapshot — must reproduce its
     alone-run output exactly, and the drained pool must be whole."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=32, n_slots=2, prefill_len=10, page_size=8, n_pages=3)
+    kw = {"max_len": 32, "n_slots": 2, "prefill_len": 10, "page_size": 8, "n_pages": 3}
     prompts = _prompts(cfg, (7, 9, 5), seed=6)
     budgets = [6, 6, 8]
     samplings = [None, None, SamplingParams(temperature=0.7, top_k=5,
@@ -228,7 +227,7 @@ def test_preempted_equals_alone_explicit(arch):
     ring/SSM caches hold no pages, so ``preempt`` is driven by hand —
     snapshotting, re-queuing and re-prefilling follow the same path."""
     cfg, model, params = _model(arch)
-    kw = dict(max_len=48, n_slots=2, prefill_len=11)
+    kw = {"max_len": 48, "n_slots": 2, "prefill_len": 11}
     prompts = _prompts(cfg, (5, 9, 7), seed=3)
     budgets = [10, 8, 6]
     eng = ServeEngine(model, params, **kw)
@@ -256,7 +255,7 @@ def test_resumed_overlength_prompt_rides_a_solo_wave():
     reproduce its alone-run output — checked on the MoE family, the one
     that can actually tell."""
     cfg, model, params = _model("granite_moe_3b_a800m")
-    kw = dict(max_len=48, n_slots=2, prefill_len=8)
+    kw = {"max_len": 48, "n_slots": 2, "prefill_len": 8}
     prompts = _prompts(cfg, (5, 6), seed=11)
     eng = ServeEngine(model, params, **kw)
     r0 = eng.submit(prompts[0], 12)

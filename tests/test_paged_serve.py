@@ -93,7 +93,7 @@ def test_paged_matches_contiguous_staggered(arch):
     (dense full KV) actually pages; hymba (ring + SSM) and mamba2 (SSM)
     have constant-size caches, so ``page_size`` must be a no-op for them."""
     cfg, model, params = _model(arch)
-    kw = dict(max_len=48, n_slots=2, prefill_len=11)
+    kw = {"max_len": 48, "n_slots": 2, "prefill_len": 11}
     prompts = _prompts(cfg, (4, 11, 7), seed=2)
     budgets = [7, 4, 6]
 
@@ -108,7 +108,7 @@ def test_paged_matches_contiguous_staggered(arch):
         return eng, [eng.result(r) for r in rids]
 
     eng_c, out_c = run({})
-    eng_p, out_p = run(dict(page_size=16))
+    eng_p, out_p = run({"page_size": 16})
     assert eng_p._paged == (arch == "stablelm_12b")
     for i, (c, p) in enumerate(zip(out_c, out_p)):
         np.testing.assert_array_equal(c, p, err_msg=f"{arch} request {i}")
@@ -123,7 +123,7 @@ def test_hybrid_full_kv_pages_with_ssm_slot_leaves():
     cfg = cfg.replace(window=0)
     model = get_model(cfg)
     prompts = _prompts(cfg, (5, 9), seed=9)
-    kw = dict(max_len=32, n_slots=2, prefill_len=10)
+    kw = {"max_len": 32, "n_slots": 2, "prefill_len": 10}
     out_c = ServeEngine(model, params, **kw).generate(prompts, 5)
     eng_p = ServeEngine(model, params, page_size=8, **kw)
     assert eng_p._paged and "ssm_h" in eng_p.model.init_paged_cache(2, 8, 8)
@@ -132,7 +132,7 @@ def test_hybrid_full_kv_pages_with_ssm_slot_leaves():
 
 def test_moe_paged_matches_contiguous():
     cfg, model, params = _model("granite_moe_3b_a800m")
-    kw = dict(max_len=32, n_slots=2, prefill_len=8)
+    kw = {"max_len": 32, "n_slots": 2, "prefill_len": 8}
     prompts = _prompts(cfg, (5, 8), seed=3)
     eng_c = ServeEngine(model, params, **kw)
     eng_p = ServeEngine(model, params, page_size=8, **kw)
@@ -167,7 +167,7 @@ def test_oom_admission_backpressure():
     pool dry) must keep the traffic within the pool, in FIFO order, and
     every request still completes with its alone-run output."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=32, n_slots=2, prefill_len=10, page_size=8, n_pages=3)
+    kw = {"max_len": 32, "n_slots": 2, "prefill_len": 10, "page_size": 8, "n_pages": 3}
     prompts = _prompts(cfg, (7, 9, 5), seed=6)
     budget = 6                                    # ceil((9+6-1)/8) = 2 pages
     eng = ServeEngine(model, params, **kw)
@@ -198,7 +198,7 @@ def test_retired_slot_is_frozen_and_reusable():
     cache. Retire -> many steps -> reuse must leave every output equal to
     its alone run, and the freed slot's length must stay pinned at 0."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=64, n_slots=2, prefill_len=PF, page_size=16)
+    kw = {"max_len": 64, "n_slots": 2, "prefill_len": PF, "page_size": 16}
     prompts = _prompts(cfg, (5, 9, 7), seed=7)
 
     eng = ServeEngine(model, params, **kw)

@@ -10,8 +10,13 @@ import pytest
 from repro.configs import smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
-from repro.serve import (FIFOScheduler, Request, SamplingParams, ServeEngine,
-                         sample_tokens)
+from repro.serve import (
+    FIFOScheduler,
+    Request,
+    SamplingParams,
+    ServeEngine,
+    sample_tokens,
+)
 
 PF = 12           # pinned prefill_len: request outputs must not depend on
                   # wave composition, so the one wave-dependent shape is fixed
@@ -41,7 +46,7 @@ def test_staggered_arrivals_match_single_request_runs():
     different steps (budgets differ); one uses temperature+top-k sampling.
     Every output must equal the same request run alone."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=64, n_slots=2, prefill_len=PF)
+    kw = {"max_len": 64, "n_slots": 2, "prefill_len": PF}
     prompts = _prompts(cfg, (5, 9, 7, 12))
     budgets = [8, 5, 10, 6]
     samplings = [None, None, None,
@@ -70,7 +75,7 @@ def test_ring_and_ssm_cache_staggered_parity(arch):
     """The slot discipline must hold for every cache kind: hymba = ring KV
     (window < max_len) + SSM state, mamba2 = pure constant-size SSM."""
     cfg, model, params = _model(arch)
-    kw = dict(max_len=48, n_slots=2, prefill_len=11)
+    kw = {"max_len": 48, "n_slots": 2, "prefill_len": 11}
     prompts = _prompts(cfg, (4, 11, 7), seed=2)
     budgets = [7, 4, 6]
 
@@ -93,7 +98,7 @@ def test_early_eos_pads_output_with_eos_id():
     with 0 — a valid token id — so early-finished rows read as if they had
     generated token 0 forever."""
     cfg, model, params = _model("stablelm_12b")
-    kw = dict(max_len=64, n_slots=2, prefill_len=PF)
+    kw = {"max_len": 64, "n_slots": 2, "prefill_len": PF}
     prompts = _prompts(cfg, (6, 8), seed=3)
 
     eng = ServeEngine(model, params, **kw)

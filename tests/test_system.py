@@ -7,8 +7,10 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.data import LMBatches, PDEBatches
-from repro.models import get_model, pde as pde_mod, swin as swin_mod
+from repro.models import get_model
 from repro.models import pairformer as pf_mod
+from repro.models import pde as pde_mod
+from repro.models import swin as swin_mod
 from repro.models.common import init_params, stack_layers
 from repro.optim import AdamW, cosine
 from repro.serve import ServeEngine
