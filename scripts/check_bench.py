@@ -27,12 +27,17 @@ than ``--tolerance`` (default 30%) below its committed baseline:
    (ISSUE 7). Gated at a FIXED structural floor of 1.2 (not
    tolerance-scaled): chunked admission amortizing the arrival sits > 2,
    a degeneration into a monolithic prefill stall sits ~1.0.
-6. neural (``--neural``, opt-in): the Table 6 Pairformer inference A/B
+6. serve: ``prefix_sharing.ratio`` — shared-prefix admission throughput,
+   prefix cache on over off, at the 64-requests x 512-token-prefix point
+   (ISSUE 9). Gated at a FIXED structural floor of 2.0: page sharing
+   deletes ~8/9 of the prefill compute there (> 3 observed), while an
+   admission path that silently stops matching sits ~1.0.
+7. neural (``--neural``, opt-in): the Table 6 Pairformer inference A/B
    from BENCH_neural.json — dense-path time / FlashBias-neural-path time,
    a same-machine ratio gated against a committed conservative baseline
    (the neural path ran ungated since the bench landed, so a factor-MLP
    regression would have merged silently).
-7. pairformer (``--pairformer``, opt-in): the ISSUE 6 batched-serve A/B
+8. pairformer (``--pairformer``, opt-in): the ISSUE 6 batched-serve A/B
    from BENCH_pairformer.json. Two gates: the headline
    ``factored_vs_dense.ratio`` (factored factor-cache step vs the official
    recompute-from-z dataflow, interleaved, >= 1.0 within tolerance — the
@@ -104,6 +109,8 @@ SCHEMAS: dict[str, tuple[str, ...]] = {
         "lazy_vs_whole.ratio",
         "layout_vs_legacy.ratio",
         "chunked_prefill.ratio",
+        "prefix_sharing.ratio",
+        "prefix_sharing.hit_rate",
     ),
     "neural": (
         "rows[name=table6_infer_dense_pairbias].us_per_call",
@@ -185,6 +192,13 @@ def chunked_prefill_ratio(bench: dict) -> float:
     chunked prefill amortizes the arrival, ~1.0 when it degenerates into
     a monolithic prefill stall."""
     return float(bench["chunked_prefill"]["ratio"])
+
+
+def prefix_sharing_ratio(bench: dict) -> float:
+    """Interleaved cached/uncached shared-prefix admission throughput
+    ratio (ISSUE 9): >= 2 when prefix hits skip the shared pages'
+    prefill chunks, ~1.0 when admission stops matching."""
+    return float(bench["prefix_sharing"]["ratio"])
 
 
 def neural_speedup(bench: dict) -> float:
@@ -366,6 +380,15 @@ def main(argv=None) -> int:
         chunked_prefill_ratio(serve),
         1.2,
         "interleaved A/B, structural floor 1.2",
+        failures,
+    )
+    # fixed structural floor like chunked_prefill: sharing working sits
+    # > 3 at the 64 x 512 point, admission silently not matching ~1.0
+    check(
+        "serve shared-prefix admission ratio",
+        prefix_sharing_ratio(serve),
+        2.0,
+        "interleaved A/B, structural floor 2.0",
         failures,
     )
     if neural is not None:

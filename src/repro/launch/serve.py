@@ -46,6 +46,16 @@ def main(argv=None):
                     help="> 0: chunked prefill — prompts land this many "
                          "tokens per engine step, interleaved with decode "
                          "(long arrivals never stall the batch)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hashed prefix caching: requests whose "
+                         "prompts share completed pages map their page "
+                         "tables onto them and prefill only the novel "
+                         "tail (needs --page-size; defaults "
+                         "--prefill-chunk to the page size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="> 0: prepend a common prefix of this many "
+                         "tokens to every request (system-prompt traffic "
+                         "— watch --prefix-cache hit rates)")
     ap.add_argument("--mesh", default="",
                     help="DxM (e.g. 2x2): serve on a (data, model) device "
                          "mesh — TP-sharded heads/pools, DP-sharded slot "
@@ -54,6 +64,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.pool_pages and not args.page_size:
         ap.error("--pool-pages requires --page-size (paged KV)")
+    if args.prefix_cache and not args.page_size:
+        ap.error("--prefix-cache requires --page-size (paged KV)")
+    if args.prefix_cache and not args.prefill_chunk:
+        args.prefill_chunk = args.page_size
     mesh = None
     if args.mesh:
         d, m = (int(v) for v in args.mesh.lower().split("x"))
@@ -65,7 +79,7 @@ def main(argv=None):
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
     params = init_params(model.template(), jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.new_tokens + 8
+    max_len = args.shared_prefix + args.prompt_len + args.new_tokens + 8
     kw = {}
     if args.page_size:
         # every request fits max_len here by construction, so cap the page
@@ -78,29 +92,37 @@ def main(argv=None):
             kw["n_pages"] = args.pool_pages
     if args.prefill_chunk:
         kw["prefill_chunk"] = args.prefill_chunk
+    if args.prefix_cache:
+        kw["prefix_cache"] = True
     if mesh is not None:
         kw["mesh"] = mesh
     engine = ServeEngine(model, params, max_len=max_len,
-                         n_slots=args.slots, prefill_len=args.prompt_len,
+                         n_slots=args.slots,
+                         prefill_len=args.shared_prefix + args.prompt_len,
                          **kw)
 
     rng = np.random.default_rng(args.seed)
     lens = rng.integers(4, args.prompt_len + 1, (args.requests,))
+    common = rng.integers(0, cfg.vocab,
+                          (args.shared_prefix,)).astype(np.int32)
+
+    def make_prompt(n):
+        tail = rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+        return np.concatenate([common, tail]) if common.size else tail
+
     rids = []
     t0 = time.monotonic()
     # staggered arrivals: half the traffic queues up front, the rest joins
     # one request per engine step while earlier requests are mid-decode
     for i in range(args.requests // 2):
         rids.append(engine.submit(
-            rng.integers(0, cfg.vocab, (lens[i],)).astype(np.int32),
-            args.new_tokens,
+            make_prompt(lens[i]), args.new_tokens,
             sampling=SamplingParams(args.temperature, args.top_k, seed=i)))
     i = args.requests // 2
     while len(engine.scheduler) or engine.occupancy or i < args.requests:
         if i < args.requests:
             rids.append(engine.submit(
-                rng.integers(0, cfg.vocab, (lens[i],)).astype(np.int32),
-                args.new_tokens,
+                make_prompt(lens[i]), args.new_tokens,
                 sampling=SamplingParams(args.temperature, args.top_k, seed=i)))
             i += 1
         engine.step()
@@ -115,6 +137,13 @@ def main(argv=None):
         print(f"[serve] pages: {stats['watermark']}/{stats['n_pages']} peak "
               f"({args.page_reservation}), {stats['grown']} grown "
               f"mid-flight, {stats['preemptions']} preemptions")
+        if "prefix" in stats:
+            pf = stats["prefix"]
+            print(f"[serve] prefix cache: {pf['hit_rate']:.0%} hit rate "
+                  f"({pf['tokens_matched']}/{pf['tokens_matchable']} "
+                  f"tokens), {pf['entries']} entries, "
+                  f"{pf['cow_copies']} CoW copies, "
+                  f"{pf['evictions']} evictions")
     print("first request:", engine.result(rids[0])[:16])
     return [engine.result(r) for r in rids]
 

@@ -29,6 +29,9 @@
 - ``grow_page_table(dst, slots, tables)`` — rewrite page-table rows for
   slots that grew a page mid-flight (lazy growth); existing page CONTENT
   is not re-scattered, only the int32 rows move,
+- ``copy_pages(dst, src_ids, dst_ids)`` — copy whole pages (K/V +
+  ``pages_phi`` rows) between pool slots: the copy-on-write primitive for
+  prefix caching (out-of-range dst ids are dropped),
 - ``input_specs(shape)``             — ShapeDtypeStruct stand-ins for every
   model input of an assigned (shape) cell: weak-type-correct, shardable,
   never allocated. This is what the multi-pod dry-run lowers against.
@@ -60,6 +63,7 @@ class Model:
     init_paged_cache: Optional[Callable] = None
     insert_paged: Optional[Callable] = None
     grow_page_table: Optional[Callable] = None
+    copy_pages: Optional[Callable] = None
     input_specs: Optional[Callable] = None
 
 
@@ -122,6 +126,10 @@ def _lm_model(cfg: ArchConfig) -> Model:
         grow_page_table=(lm.grow_page_tables_at_slots
                          if cfg.family in ("dense", "moe", "hybrid")
                          else None),
+        copy_pages=(
+            (lambda dst, src_ids, dst_ids: lm.copy_paged_pages(
+                dst, src_ids, dst_ids, layout=cfg.cache_layout))
+            if cfg.family in ("dense", "moe", "hybrid") else None),
         input_specs=input_specs,
     )
 

@@ -1353,6 +1353,43 @@ def grow_page_tables_at_slots(dst: dict, slots, tables) -> dict:
     return out
 
 
+def copy_paged_pages(dst: dict, src_ids, dst_ids, *,
+                     layout: str = "kernel") -> dict:
+    """Copy whole pages ``src_ids[i] -> dst_ids[i]`` across every paged
+    pool leaf: K, V, and the ``pages_phi`` factor slab.
+
+    The copy-on-write primitive for prefix caching (ISSUE 9): when a
+    request must write into a page other holders share (its prompt re-run
+    span or decode growth lands mid-page), the engine allocates a private
+    page and copies the shared content here before any write. ``src_ids``
+    and ``dst_ids`` are fixed-width ``(W,)`` int32 vectors; entries whose
+    dst id is out of range (>= n_pages) are DROPPED and their src id is
+    only clamped, so a fixed-width CoW batch compiles once per engine.
+    All gathers read the pre-copy pool, so a batch may even reuse a
+    just-evicted src page as another entry's dst. Theta(W * page) — never
+    pool-sized, and no relayout of the pool itself (statcheck
+    ``no-pool-relayout`` holds for this program)."""
+    assert layout in ("kernel", "legacy"), layout
+    src_ids = jnp.asarray(src_ids, jnp.int32)
+    dst_ids = jnp.asarray(dst_ids, jnp.int32)
+    page_axis = 2 if layout == "kernel" else 1
+    out = dict(dst)
+    for pool_key in ("pages_k", "pages_v"):
+        pool = dst[pool_key]
+        take = jnp.clip(src_ids, 0, pool.shape[page_axis] - 1)
+        if page_axis == 2:      # kernel: (L, KVH, n_pages, ps, hd_pad)
+            out[pool_key] = pool.at[:, :, dst_ids].set(pool[:, :, take],
+                                                       mode="drop")
+        else:                   # legacy: (L, n_pages, ps, KVH, hd)
+            out[pool_key] = pool.at[:, dst_ids].set(pool[:, take],
+                                                    mode="drop")
+    if "pages_phi" in dst:
+        phi = dst["pages_phi"]                  # (n_pages, ps, r_slab)
+        take = jnp.clip(src_ids, 0, phi.shape[0] - 1)
+        out["pages_phi"] = phi.at[dst_ids].set(phi[take], mode="drop")
+    return out
+
+
 def insert_cache_at_slots(dst: dict, src: dict, slots) -> dict:
     """Scatter wave-cache rows of ``src`` into batch slots of ``dst``.
 

@@ -6,9 +6,10 @@ the request lifecycle.
 from repro.serve.backend import Backend, PairBatchBackend, TokenDecodeBackend
 from repro.serve.engine import ServeEngine
 from repro.serve.pages import PagePool
+from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import FIFOScheduler, Request
 
 __all__ = ["ServeEngine", "Backend", "TokenDecodeBackend",
-           "PairBatchBackend", "PagePool", "SamplingParams", "sample_tokens",
-           "FIFOScheduler", "Request"]
+           "PairBatchBackend", "PagePool", "PrefixCache", "SamplingParams",
+           "sample_tokens", "FIFOScheduler", "Request"]

@@ -34,6 +34,7 @@ import numpy as np
 from repro.dist.sharding import Rules, shard_put, use_mesh_rules
 from repro.models.api import Model
 from repro.serve.pages import PagePool
+from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import ChunkPlan, Request
 
@@ -176,6 +177,7 @@ class TokenDecodeBackend(Backend):
                  pages_per_slot: Optional[int] = None,
                  page_reservation: str = "lazy",
                  prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
                  mesh=None, rules: Optional[Rules] = None):
         assert page_reservation in ("lazy", "whole"), page_reservation
         self.model, self.params = model, params
@@ -211,6 +213,27 @@ class TokenDecodeBackend(Backend):
                                       self.n_pages)
             self._pool = PagePool(self.n_pages, page_size)
             self._slot_pages: Dict[int, List[int]] = {}
+        # prefix caching (ISSUE 9): content-hashed sharing of completed
+        # prompt pages. Requires the paged pool (sharing is page-table
+        # indirection), the chunked planner (the novel tail lands through a
+        # mid-prompt ChunkPlan) and a family whose slot state lives
+        # ENTIRELY in pages — hybrid's SSM state is recurrent and cannot
+        # be rebuilt from a mid-prompt prefill start.
+        self._prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            assert self.paged and self.chunk_size, \
+                "prefix_cache needs paged KV (page_size) + chunked " \
+                "prefill (prefill_chunk): shared pages map through the " \
+                "page table and novel tails land via mid-prompt ChunkPlans"
+            assert cfg.family in ("dense", "moe"), \
+                f"prefix_cache shares KV pages only — family " \
+                f"'{cfg.family}' carries per-slot recurrent state a " \
+                f"mid-prompt prefill start cannot rebuild"
+            assert model.copy_pages is not None
+            self._prefix = PrefixCache(page_size)
+            self._n_cow = 0                  # CoW page copies performed
+            self._tok_matched = 0            # prefix tokens served from cache
+            self._tok_matchable = 0          # full-block tokens seen at admit
         self._cache = None                        # allocated on first step
 
         def _pf(p, toks, front, lengths, max_len):
@@ -233,6 +256,10 @@ class TokenDecodeBackend(Backend):
             self._insert_paged = jax.jit(self._with_mesh(model.insert_paged))
             self._grow_tables = jax.jit(self._with_mesh(
                 model.grow_page_table))
+        if self._prefix is not None:
+            # fixed-shape CoW program: (n_slots,) src/dst page ids per
+            # call, out-of-range dst ids dropped — compiles once
+            self._copy_pages = jax.jit(self._with_mesh(model.copy_pages))
         if self.chunk_size:
             self._chunk = jax.jit(self._with_mesh(model.prefill_chunk),
                                   static_argnames=("max_pages",))
@@ -332,11 +359,22 @@ class TokenDecodeBackend(Backend):
             # can never cover would preempt everything and still deadlock
             needed = self._pages_needed(req)
             cap = min(self.pages_per_slot, self.n_pages)
+            if needed > cap:
+                # shared-prefix hits don't lift the bound (shared pages
+                # still occupy page-table row entries and pool pages), but
+                # the message must state what admission actually reserves
+                shared = ""
+                if self._prefix is not None:
+                    hit = len(self._prefix.match(req.tokens)[0])
+                    shared = (f", of which {hit} currently shared via the "
+                              f"prefix cache — admission would reserve "
+                              f"{needed - hit} fresh pages but the table "
+                              f"row still references all {needed}")
             assert needed <= cap, \
                 f"paged mode: request footprint {needed} pages " \
                 f"(ceil((prompt {req.prompt_len} + budget " \
                 f"{req.max_new_tokens} - 1) / page_size {self.page_size}))" \
-                f" exceeds {cap} " \
+                f"{shared} exceeds {cap} " \
                 f"(page-table row width {self.pages_per_slot}, " \
                 f"pool {self.n_pages} pages)"
         elif self._bounded_cache:
@@ -359,13 +397,54 @@ class TokenDecodeBackend(Backend):
 
     def admission_units(self, req: Request) -> int:
         """Pages reserved at admission: just the prompt's under lazy
-        growth, the full worst-case footprint under ``"whole"``."""
-        if self.lazy:
-            return self._pool.pages_needed(req.prompt_len)
-        return self._pages_needed(req)
+        growth, the full worst-case footprint under ``"whole"``. With
+        prefix caching, matched pages that already have a LIVE holder
+        (refcount >= 2) cost nothing — index-only matches (refcount 1)
+        still count, because the same pages appear in ``units_free``'s
+        evictable pool and must not be double-counted."""
+        units = (self._pool.pages_needed(req.prompt_len) if self.lazy
+                 else self._pages_needed(req))
+        if self._prefix is not None:
+            kept, _, _, _ = self._prefix_plan(req)
+            units -= sum(1 for p in kept if self._pool.refcount(p) >= 2)
+        return units
 
     def units_free(self) -> int:
-        return self._pool.n_free
+        """Pages admission can draw on: the free list plus pages the
+        prefix index retains with no live sharer (evictable on demand)."""
+        free = self._pool.n_free
+        if self._prefix is not None:
+            free += self._prefix.n_evictable(self._pool)
+        return free
+
+    def _reclaim(self, n: int) -> None:
+        """Make sure ``n`` pages are actually on the free list, evicting
+        index-retained pages (LRU, leaf-first) if the free list is short.
+        Callers gated on ``units_free`` so the eviction always suffices."""
+        if self._prefix is not None and self._pool.n_free < n:
+            self._prefix.evict(self._pool, n - self._pool.n_free)
+
+    def _prefix_plan(self, req: Request) -> Tuple[List[int], List[int],
+                                                  int, int]:
+        """Resolve a request against the prefix index:
+        ``(kept, cow_src, done, matched_tokens)``.
+
+        ``kept`` pages are shared as-is (page-table indirection + incref).
+        ``done`` — where the mid-prompt ChunkPlan starts — is ``matched``
+        floored to a CHUNK multiple and capped below the prompt length:
+        chunk boundaries then land exactly where the unshared engine's do
+        (admission always chunks from a chunk-multiple offset), which is
+        what makes shared outputs BIT-identical, and the final chunk always
+        exists to produce the first sampled token. Matched pages covering
+        the re-run span ``[done, matched)`` would be written by a sharer —
+        they are returned as ``cow_src`` for copy-on-write instead."""
+        pages, matched = self._prefix.match(req.tokens)
+        if not pages:
+            return [], [], 0, 0
+        done = (min(matched, req.prompt_len - 1)
+                // self.chunk_size) * self.chunk_size
+        k = len(pages) if done >= matched else done // self.page_size
+        return pages[:k], pages[k:], done, matched
 
     def page_cap(self, live) -> Optional[int]:
         """Static page bound for this decode step: pow2-rounded pages of
@@ -393,6 +472,7 @@ class TokenDecodeBackend(Backend):
     def grow_slots(self, growing: List[int]) -> None:
         """Allocate the next page for every growing slot and push the new
         table rows to the device in one fixed-shape jitted scatter."""
+        self._reclaim(len(growing))
         slot_ids = np.full((self.n_slots,), self.n_slots, np.int32)
         tables = np.full((self.n_slots, self.pages_per_slot), self.n_pages,
                          np.int32)
@@ -497,18 +577,58 @@ class TokenDecodeBackend(Backend):
         the chunk program itself (write-then-attend), so only the int32
         page-table rows move here — one fixed-shape jitted scatter."""
         ns = self.n_slots
+        starts: Dict[int, int] = {}
         if self.paged:
             slot_ids = np.full((ns,), ns, np.int32)
             tables = np.full((ns, self.pages_per_slot), self.n_pages,
                              np.int32)
+            cow_jobs: List[Tuple[int, int]] = []   # (src, dst) page copies
             for i, (slot, r) in enumerate(zip(slots, wave)):
-                pages = self._pool.alloc(self.admission_units(r))
+                kept: List[int] = []
+                cow_src: List[int] = []
+                if self._prefix is not None:
+                    kept, cow_src, done, matched = self._prefix_plan(r)
+                    starts[slot] = done
+                    self._tok_matched += matched
+                    self._tok_matchable += (r.prompt_len // self.page_size
+                                            ) * self.page_size
+                    # pin shared pages (kept AND CoW sources) before any
+                    # eviction this wave triggers can reach them
+                    self._pool.incref(kept + cow_src)
+                total = (self._pool.pages_needed(r.prompt_len) if self.lazy
+                         else self._pages_needed(r))
+                self._reclaim(total - len(kept))
+                fresh = self._pool.alloc(total - len(kept))
+                # fresh pages fill the table row after the kept prefix; the
+                # first len(cow_src) of them are private copies of shared
+                # pages the re-run span [done, matched) will write into
+                cow_jobs += list(zip(cow_src, fresh))
+                if cow_src:
+                    self._n_cow += len(cow_src)
+                pages = kept + fresh
                 self._slot_pages[slot] = pages
                 slot_ids[i] = slot
                 tables[i, :len(pages)] = pages
             self._cache = self._grow_tables(self._cache,
                                             jnp.asarray(slot_ids),
                                             jnp.asarray(tables))
+            if cow_jobs:
+                # copy shared content into the private pages BEFORE any
+                # chunk program writes; one fixed-shape program per
+                # n_slots-wide batch, in-batch gathers read the pre-copy
+                # pool so a same-wave evict/reuse cannot misorder
+                for j0 in range(0, len(cow_jobs), ns):
+                    batch = cow_jobs[j0:j0 + ns]
+                    src = np.full((ns,), self.n_pages, np.int32)
+                    dst = np.full((ns,), self.n_pages, np.int32)
+                    for j, (s_pg, d_pg) in enumerate(batch):
+                        src[j], dst[j] = s_pg, d_pg
+                    self._cache = self._copy_pages(self._cache,
+                                                   jnp.asarray(src),
+                                                   jnp.asarray(dst))
+                # drop the planning pin on CoW sources: the sharer now owns
+                # a private copy, the cached entry stays valid for others
+                self._pool.free([s_pg for s_pg, _ in cow_jobs])
         sl = jnp.asarray(np.asarray(slots, np.int32))
         self._temps = self._temps.at[sl].set(jnp.asarray(
             [r.sampling.temperature for r in wave], jnp.float32))
@@ -518,7 +638,9 @@ class TokenDecodeBackend(Backend):
             [jax.random.PRNGKey(r.sampling.seed) if r.key_override is None
              else jnp.asarray(r.key_override, jnp.uint32) for r in wave]))
         for slot, r in zip(slots, wave):
-            self._pending[slot] = ChunkPlan(r)
+            # prefix hits start the cursor mid-prompt: the shared pages
+            # already hold positions [0, done), only the tail lands
+            self._pending[slot] = ChunkPlan(r, done=starts.get(slot, 0))
         return None, np.zeros((ns,), bool)
 
     def prefill_pending(self) -> bool:
@@ -567,7 +689,13 @@ class TokenDecodeBackend(Backend):
             self.params, self._cache, jnp.asarray(toks), jnp.asarray(offs),
             jnp.asarray(clens), jnp.asarray(flens), max_pages=cap)
         for slot in finalized:
-            del self._pending[slot]
+            plan = self._pending.pop(slot)
+            if self._prefix is not None:
+                # the prompt has fully landed: its FULL pages are immutable
+                # from here (decode writes at positions >= prompt_len, and
+                # partial last pages are never registered) — index them
+                self._prefix.insert(plan.req.tokens,
+                                    self._slot_pages[slot], self._pool)
         mask = np.zeros((ns,), bool)
         mask[finalized] = True
         return self._sample(logits[:, 0], mask), mask
@@ -643,9 +771,22 @@ class TokenDecodeBackend(Backend):
     def stats(self) -> dict:
         if not self.paged:
             return {}
-        return {"n_pages": self.n_pages, "n_free": self._pool.n_free,
-                "watermark": self._pool.watermark,
-                "grown": self._pool.n_grown}
+        out = {"n_pages": self.n_pages, "n_free": self._pool.n_free,
+               "watermark": self._pool.watermark,
+               "grown": self._pool.n_grown}
+        if self._prefix is not None:
+            matched, matchable = self._tok_matched, self._tok_matchable
+            out["prefix"] = {
+                "entries": len(self._prefix),
+                "cached_pages": self._prefix.n_cached(self._pool),
+                "tokens_matched": matched,
+                "tokens_matchable": matchable,
+                "hit_rate": matched / matchable if matchable else 0.0,
+                "cow_copies": self._n_cow,
+                "evictions": self._prefix.n_evicted,
+                "collisions_rejected": self._prefix.n_rejected,
+            }
+        return out
 
 
 class PairBatchBackend(Backend):

@@ -106,6 +106,15 @@ class ServeEngine:
             keeps whole-prompt admission waves, bit-identical to the
             pre-chunking engine. Ring-KV archs clamp the chunk to the
             attention window.
+        prefix_cache: True enables content-hashed prefix caching
+            (ISSUE 9): completed prompt pages are indexed by token
+            content, a new request whose prompt starts with an indexed
+            prefix maps its page table onto the existing pages (refcounted
+            sharing + copy-on-write) and prefills only the novel tail.
+            Requires ``page_size`` + ``prefill_chunk`` and a full-KV
+            family without recurrent state (dense / moe). Outputs stay
+            bit-identical to the unshared engine; see serve/README.md
+            §Prefix caching contract.
         mesh / rules: device mesh + logical-axis rules for the token
             backend (ISSUE 7). The backend traces every jitted program
             under ``use_mesh_rules`` and places its persistent state with
@@ -124,6 +133,7 @@ class ServeEngine:
                  scheduler_policy: str = "fifo",
                  factors: Optional[dict] = None,
                  prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
                  mesh=None, rules=None):
         assert model.prefill is not None and model.decode is not None, \
             "model is not serve-capable"
@@ -132,8 +142,10 @@ class ServeEngine:
         self.max_len, self.eos_id = max_len, eos_id
         self.n_slots, self.prefill_len = n_slots, prefill_len
         if model.cfg.family == "pairformer":
-            assert prefill_chunk is None and mesh is None, \
-                "chunked prefill / mesh sharding are token-backend paths"
+            assert prefill_chunk is None and mesh is None \
+                and not prefix_cache, \
+                "chunked prefill / prefix cache / mesh sharding are " \
+                "token-backend paths"
             self.backend = PairBatchBackend(model, params, max_len=max_len,
                                             n_slots=n_slots, factors=factors)
         else:
@@ -142,7 +154,8 @@ class ServeEngine:
                 prefill_len=prefill_len, page_size=page_size,
                 n_pages=n_pages, pages_per_slot=pages_per_slot,
                 page_reservation=page_reservation,
-                prefill_chunk=prefill_chunk, mesh=mesh, rules=rules)
+                prefill_chunk=prefill_chunk, prefix_cache=prefix_cache,
+                mesh=mesh, rules=rules)
         if self.backend.paged:
             self.page_size = self.backend.page_size
             self.n_pages = self.backend.n_pages

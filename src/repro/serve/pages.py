@@ -27,6 +27,14 @@ pages are handed out lowest-index-first for deterministic page tables. The
 pool also keeps a high-water mark (``watermark``) of pages simultaneously
 in use plus a count of mid-flight ``grow`` allocations, so benchmarks and
 tests can see how much memory lazy growth actually commits.
+
+Since ISSUE 9 pages are REFCOUNTED: prefix caching (``serve/prefix.py``)
+maps several requests' page tables — plus the prefix index itself — onto
+one physical page, so "free" is a decref and a page returns to the free
+list only when its last holder lets go. ``free`` reports which pages
+actually drained so callers (the prefix index) can invalidate entries.
+Decref of a page that is already free is still rejected loudly — the
+double-free tripwire survives sharing.
 """
 from __future__ import annotations
 
@@ -45,7 +53,7 @@ class PagePool:
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages))   # heap, lowest first
         heapq.heapify(self._free)
-        self._allocated = [False] * n_pages
+        self._refs = [0] * n_pages         # holders per page; 0 = free
         self._watermark = 0                # peak pages simultaneously in use
         self._grown = 0                    # pages allocated via grow()
 
@@ -80,8 +88,13 @@ class PagePool:
     def can_alloc(self, n: int) -> bool:
         return n <= self.n_free
 
+    def refcount(self, page: int) -> int:
+        """Holders of ``page`` (requests + the prefix index). 0 = free."""
+        assert 0 <= page < self.n_pages, page
+        return self._refs[page]
+
     # ------------------------------------------------------------------
-    # Alloc / grow / free
+    # Alloc / grow / incref / free
     # ------------------------------------------------------------------
 
     def alloc(self, n: int) -> List[int]:
@@ -91,8 +104,8 @@ class PagePool:
             raise MemoryError(f"PagePool: want {n} pages, {self.n_free} free")
         pages = [heapq.heappop(self._free) for _ in range(n)]
         for p in pages:
-            assert not self._allocated[p], f"double allocation of page {p}"
-            self._allocated[p] = True
+            assert self._refs[p] == 0, f"double allocation of page {p}"
+            self._refs[p] = 1
         self._watermark = max(self._watermark, self.n_used)
         return pages
 
@@ -105,10 +118,26 @@ class PagePool:
         self._grown += n
         return pages
 
-    def free(self, pages: Iterable[int]) -> None:
-        """Return pages to the pool. Double-free is an error."""
+    def incref(self, pages: Iterable[int]) -> None:
+        """Add a holder to already-allocated pages (prefix sharing: a new
+        request maps its page table onto pages some other holder owns).
+        Incref of a free page is an error — sharing never resurrects."""
         for p in pages:
             assert 0 <= p < self.n_pages, p
-            assert self._allocated[p], f"double free of page {p}"
-            self._allocated[p] = False
-            heapq.heappush(self._free, p)
+            assert self._refs[p] > 0, f"incref of free page {p}"
+            self._refs[p] += 1
+
+    def free(self, pages: Iterable[int]) -> List[int]:
+        """Drop one reference per page; pages whose last holder left return
+        to the free list. Decref of a free page (double free) is an error.
+        Returns the pages that actually drained, so the prefix index can
+        drop entries that no longer point at live content."""
+        freed: List[int] = []
+        for p in pages:
+            assert 0 <= p < self.n_pages, p
+            assert self._refs[p] > 0, f"double free of page {p}"
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                heapq.heappush(self._free, p)
+                freed.append(p)
+        return freed

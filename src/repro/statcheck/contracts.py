@@ -7,8 +7,10 @@ families); trunk prefill, refinement step, factor-cache insert
 (pairformer) — and runs the :mod:`repro.statcheck.jaxpr_rules` walkers
 over each closed jaxpr:
 
-- ``no-pool-relayout`` on the decode/chunk programs (the ISSUE-5
-  tripwire: zero Θ(pool) transpose/convert/broadcast per decoded token),
+- ``no-pool-relayout`` on the decode programs (the ISSUE-5 tripwire:
+  zero Θ(pool) transpose/convert/broadcast per decoded token) and on the
+  ISSUE-9 prefix-cache ``copy_pages`` copy-on-write program (a page copy
+  must stay a Θ(W·page) gather/scatter),
 - ``no-host-callback`` on every program,
 - ``eq3-fold`` on the pairformer refinement step when the factored-bias
   path is precision-free (FlashBias Eq. 3: ONE matmul of depth D + R),
@@ -80,6 +82,8 @@ def _token_backend(cfg):
     kwargs = {"page_size": PAGE_SIZE} if paged else {}
     if model.prefill_chunk is not None:
         kwargs["prefill_chunk"] = CHUNK
+    if paged and "prefill_chunk" in kwargs and cfg.family in ("dense", "moe"):
+        kwargs["prefix_cache"] = True    # ISSUE 9: trace the CoW program too
     be = TokenDecodeBackend(model, params, max_len=MAX_LEN,
                             n_slots=N_SLOTS, **kwargs)
     be.ensure_state()
@@ -173,14 +177,21 @@ def _check_token_family(family: str, cfg) -> List[Finding]:
         traced["prefill_chunk"] = be._chunk.trace(
             params, cache, ctoks, offs, offs, offs, max_pages=cap)
 
+    if getattr(be, "_prefix", None) is not None:
+        ids = sds((ns,), jnp.int32)
+        traced["copy_pages"] = be._copy_pages.trace(cache, ids, ids)
+
     for name, tr in traced.items():
         program = f"{family}/{name}"
         findings += no_host_callback(tr.jaxpr, program=program)
         # the relayout tripwire is a DECODE-step contract: per-token work
         # must be Θ(token), so zero pool-sized transposes. Prefill/chunk
         # programs legitimately transpose Θ(chunk) attention intermediates
-        # and amortize them over the whole chunk.
-        if thresh and name.startswith("decode"):
+        # and amortize them over the whole chunk. copy_pages (the ISSUE-9
+        # copy-on-write primitive) is held to the decode standard: it runs
+        # at admission inside the serve loop and must stay a Θ(W·page)
+        # gather/scatter, never a pool relayout.
+        if thresh and (name.startswith("decode") or name == "copy_pages"):
             findings += no_pool_relayout(tr.jaxpr, thresh, program=program)
     findings += _audit_recompile_bound(be, family)
     return findings

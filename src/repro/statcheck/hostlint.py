@@ -42,6 +42,7 @@ __all__ = ["LintFinding", "lint_file", "lint_tree", "HOST_MODULES",
 # modules that must never touch jax: request/page/schedule bookkeeping
 HOST_MODULES = (
     os.path.join("src", "repro", "serve", "pages.py"),
+    os.path.join("src", "repro", "serve", "prefix.py"),
     os.path.join("src", "repro", "serve", "scheduler.py"),
     os.path.join("src", "repro", "serve", "engine.py"),
 )

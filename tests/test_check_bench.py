@@ -30,7 +30,7 @@ def _healthy_kernels(speedup=1.0):
 
 
 def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0,
-                   chunked_ratio=2.4):
+                   chunked_ratio=2.4, prefix_ratio=3.2):
     return {
         "points": [
             {"occupancy": 1, "decode_tokens_per_s": decode / 2,
@@ -44,6 +44,10 @@ def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0,
                             "rounds": 3, "whole_p99_step_ms": 24.0,
                             "chunked_p99_step_ms": 24.0 / chunked_ratio,
                             "ratio": chunked_ratio},
+        "prefix_sharing": {"n_requests": 64, "shared_prefix": 512,
+                           "page_size": 64, "hit_rate": 0.98,
+                           "outputs_identical": True,
+                           "ratio": prefix_ratio},
     }
 
 
@@ -133,6 +137,19 @@ def test_regressed_chunked_prefill_ratio_fails(files):
     assert _run(bdir, kernels, bad) == 1
     assert _run(bdir, kernels, bad, "--tolerance", "0.90") == 1
     healthy = _write(tmp / "ok_c.json", _healthy_serve(chunked_ratio=1.3))
+    assert _run(bdir, kernels, healthy) == 0
+
+
+def test_regressed_prefix_sharing_ratio_fails(files):
+    """ISSUE 9 gate: shared-prefix admission that stops matching (cached/
+    uncached throughput ratio ~1.0) must fail CI. Structural floor (2.0,
+    fixed), NOT tolerance-scaled — widening --tolerance must not save
+    it."""
+    tmp, bdir, kernels, _ = files
+    bad = _write(tmp / "bad_pf.json", _healthy_serve(prefix_ratio=1.0))
+    assert _run(bdir, kernels, bad) == 1
+    assert _run(bdir, kernels, bad, "--tolerance", "0.90") == 1
+    healthy = _write(tmp / "ok_pf.json", _healthy_serve(prefix_ratio=2.2))
     assert _run(bdir, kernels, healthy) == 0
 
 
