@@ -16,7 +16,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
-from repro.serve import SamplingParams, ServeEngine
+from repro.serve import FaultPlan, SamplingParams, ServeEngine
 
 
 def main(argv=None):
@@ -56,6 +56,20 @@ def main(argv=None):
                     help="> 0: prepend a common prefix of this many "
                          "tokens to every request (system-prompt traffic "
                          "— watch --prefix-cache hit rates)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="> 0: per-request deadline — a request still live "
+                         "or queued after this many engine steps finishes "
+                         "TIMED_OUT (ISSUE 10 lifecycle)")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="quarantine retries per request before a guard "
+                         "fault becomes terminal FAILED (0: fail on the "
+                         "first non-finite emission)")
+    ap.add_argument("--inject-fault", default="",
+                    help="fault plan, e.g. 'nan@6/0x2,alloc@3x4' — "
+                         "kind@step[/slot][xcount], comma-separated; kinds: "
+                         "alloc, nan, step, delay. Drives the same "
+                         "containment paths the chaos suite gates "
+                         "(tests/test_faults.py)")
     ap.add_argument("--mesh", default="",
                     help="DxM (e.g. 2x2): serve on a (data, model) device "
                          "mesh — TP-sharded heads/pools, DP-sharded slot "
@@ -96,6 +110,8 @@ def main(argv=None):
         kw["prefix_cache"] = True
     if mesh is not None:
         kw["mesh"] = mesh
+    if args.inject_fault:
+        kw["faults"] = FaultPlan.parse(args.inject_fault)
     engine = ServeEngine(model, params, max_len=max_len,
                          n_slots=args.slots,
                          prefill_len=args.shared_prefix + args.prompt_len,
@@ -110,6 +126,8 @@ def main(argv=None):
         tail = rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
         return np.concatenate([common, tail]) if common.size else tail
 
+    sub = {"deadline_steps": args.deadline_steps or None,
+           "max_retries": args.max_retries}
     rids = []
     t0 = time.monotonic()
     # staggered arrivals: half the traffic queues up front, the rest joins
@@ -117,13 +135,15 @@ def main(argv=None):
     for i in range(args.requests // 2):
         rids.append(engine.submit(
             make_prompt(lens[i]), args.new_tokens,
-            sampling=SamplingParams(args.temperature, args.top_k, seed=i)))
+            sampling=SamplingParams(args.temperature, args.top_k, seed=i),
+            **sub))
     i = args.requests // 2
     while len(engine.scheduler) or engine.occupancy or i < args.requests:
         if i < args.requests:
             rids.append(engine.submit(
                 make_prompt(lens[i]), args.new_tokens,
-                sampling=SamplingParams(args.temperature, args.top_k, seed=i)))
+                sampling=SamplingParams(args.temperature, args.top_k, seed=i),
+                **sub))
             i += 1
         engine.step()
     dt = time.monotonic() - t0
@@ -132,6 +152,14 @@ def main(argv=None):
     print(f"[serve] {cfg.name}: {args.requests} ragged requests "
           f"(prompts {lens.min()}-{lens.max()}) over {args.slots} slots: "
           f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    counts = engine.status_counts()
+    line = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"[serve] lifecycle: {line}; {engine.n_quarantines} quarantines, "
+          f"{engine.n_faults_contained} faults contained")
+    if args.inject_fault and engine.faults is not None:
+        for step, kind, slot in engine.faults.fired:
+            at = f" slot {slot}" if slot is not None and slot >= 0 else ""
+            print(f"[serve] fault fired: {kind}@{step}{at}")
     stats = engine.page_stats()
     if stats:
         print(f"[serve] pages: {stats['watermark']}/{stats['n_pages']} peak "

@@ -1,10 +1,15 @@
 """Serving substrate: continuous-batching engine over slot cache pytrees.
 
-See README.md in this directory for the slot/cache/scheduler contract and
-the request lifecycle.
+See README.md in this directory for the slot/cache/scheduler contract,
+the request lifecycle, and the failure semantics (ISSUE 10).
 """
 from repro.serve.backend import Backend, PairBatchBackend, TokenDecodeBackend
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultPlan, FaultSpec
+from repro.serve.lifecycle import (
+    CANCELLED, FAILED, OK, QUEUED, REJECTED, RUNNING, TERMINAL_STATUSES,
+    TIMED_OUT, AdmissionRejected, EngineStalled, InjectedFault, PoolError,
+    PoolExhausted, RequestNotLive, RequestRecord, ServeError)
 from repro.serve.pages import PagePool
 from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import SamplingParams, sample_tokens
@@ -12,4 +17,9 @@ from repro.serve.scheduler import FIFOScheduler, Request
 
 __all__ = ["ServeEngine", "Backend", "TokenDecodeBackend",
            "PairBatchBackend", "PagePool", "PrefixCache", "SamplingParams",
-           "sample_tokens", "FIFOScheduler", "Request"]
+           "sample_tokens", "FIFOScheduler", "Request",
+           "FaultPlan", "FaultSpec",
+           "QUEUED", "RUNNING", "OK", "FAILED", "TIMED_OUT", "CANCELLED",
+           "REJECTED", "TERMINAL_STATUSES", "RequestRecord", "ServeError",
+           "AdmissionRejected", "EngineStalled", "InjectedFault",
+           "PoolError", "PoolExhausted", "RequestNotLive"]

@@ -33,9 +33,10 @@ import numpy as np
 
 from repro.dist.sharding import Rules, shard_put, use_mesh_rules
 from repro.models.api import Model
+from repro.serve.lifecycle import AdmissionRejected, PoolError, PoolExhausted
 from repro.serve.pages import PagePool
 from repro.serve.prefix import PrefixCache
-from repro.serve.sampling import sample_tokens
+from repro.serve.sampling import sample_tokens, sample_tokens_guarded
 from repro.serve.scheduler import ChunkPlan, Request
 
 __all__ = ["Backend", "TokenDecodeBackend", "PairBatchBackend"]
@@ -58,6 +59,8 @@ class Backend:
 
     paged: bool = False        # admission gated on page accounting
     lazy: bool = False         # pages grow mid-flight (may force preemption)
+    guards: bool = True        # host-side non-finite guards (ISSUE 10)
+    faults = None              # serve.faults.FaultPlan injection hook
 
     def ensure_state(self) -> None:
         """Allocate device state on first use (idempotent)."""
@@ -113,6 +116,31 @@ class Backend:
     def snapshot(self, slot: int, st, emitted) -> Request:
         """Preempt: freeze + free the slot, return the resumable Request."""
         raise NotImplementedError
+
+    def snapshot_request(self, slot: int, st, emitted) -> Request:
+        """The resumable Request ``snapshot`` would return, WITHOUT
+        freezing or freeing anything — the engine checkpoint (ISSUE 10)
+        serializes live slots through this, leaving the running engine
+        untouched."""
+        raise NotImplementedError
+
+    # -- fault containment (ISSUE 10) -----------------------------------
+    def take_guard_faults(self) -> Dict[int, str]:
+        """Drain {slot: detail} for slots whose last admit/step tripped a
+        non-finite guard. The engine drains after every backend call that
+        can emit and quarantines the listed slots; a drained fault is
+        forgotten (the quarantined slot re-admits with fresh state)."""
+        bad = getattr(self, "_guard_bad", None)
+        if not bad:
+            return {}
+        self._guard_bad = {}
+        return bad
+
+    def quarantine(self, slot: int) -> None:
+        """Pre-release hook for a FAULTING slot: discard anything other
+        requests could observe from it (the token backend invalidates
+        prefix-index entries for pages the slot wrote). The engine calls
+        this BEFORE the snapshot/release frees the slot's resources."""
 
     # -- resource accounting (paged backends) ---------------------------
     def admission_units(self, req: Request) -> int:
@@ -179,19 +207,26 @@ class TokenDecodeBackend(Backend):
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
                  mesh=None, rules: Optional[Rules] = None):
-        assert page_reservation in ("lazy", "whole"), page_reservation
+        if page_reservation not in ("lazy", "whole"):
+            raise ValueError(f"page_reservation must be 'lazy' or "
+                             f"'whole', got {page_reservation!r}")
         self.model, self.params = model, params
         self.max_len, self.n_slots = max_len, n_slots
         self.prefill_len = prefill_len
         self.mesh = mesh
         self.rules = (rules or Rules()) if mesh is not None else rules
+        self._guard_bad: Dict[int, str] = {}
+        self._slot_kept: Dict[int, int] = {}   # shared (unwritten) pages
         cfg = model.cfg
         self._vocab = cfg.vocab
         self._front_dim = (cfg.frontend_len, cfg.d_model)
         if prefill_chunk is not None:
-            assert prefill_chunk >= 1, prefill_chunk
-            assert model.prefill_chunk is not None, \
-                f"{cfg.family} model has no chunked-prefill path"
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, "
+                                 f"got {prefill_chunk}")
+            if model.prefill_chunk is None:
+                raise ValueError(
+                    f"{cfg.family} model has no chunked-prefill path")
             if cfg.window and cfg.window < max_len:
                 # ring cache: a chunk's positions must land on distinct
                 # ring slots, so the chunk can never exceed the window
@@ -221,15 +256,20 @@ class TokenDecodeBackend(Backend):
         # be rebuilt from a mid-prompt prefill start.
         self._prefix: Optional[PrefixCache] = None
         if prefix_cache:
-            assert self.paged and self.chunk_size, \
-                "prefix_cache needs paged KV (page_size) + chunked " \
-                "prefill (prefill_chunk): shared pages map through the " \
-                "page table and novel tails land via mid-prompt ChunkPlans"
-            assert cfg.family in ("dense", "moe"), \
-                f"prefix_cache shares KV pages only — family " \
-                f"'{cfg.family}' carries per-slot recurrent state a " \
-                f"mid-prompt prefill start cannot rebuild"
-            assert model.copy_pages is not None
+            if not (self.paged and self.chunk_size):
+                raise ValueError(
+                    "prefix_cache needs paged KV (page_size) + chunked "
+                    "prefill (prefill_chunk): shared pages map through "
+                    "the page table and novel tails land via mid-prompt "
+                    "ChunkPlans")
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"prefix_cache shares KV pages only — family "
+                    f"'{cfg.family}' carries per-slot recurrent state a "
+                    f"mid-prompt prefill start cannot rebuild")
+            if model.copy_pages is None:
+                raise ValueError(
+                    "prefix_cache needs the model's copy_pages program")
             self._prefix = PrefixCache(page_size)
             self._n_cow = 0                  # CoW page copies performed
             self._tok_matched = 0            # prefix tokens served from cache
@@ -343,15 +383,17 @@ class TokenDecodeBackend(Backend):
                                    ("batch", None))
 
     def validate(self, req: Request) -> None:
-        assert np.issubdtype(req.tokens.dtype, np.integer), \
-            "token backend takes int token prompts"
-        if self.chunk_size:
-            assert req.frontend is None, \
-                "chunked prefill takes token prompts only (frontend " \
-                "embeddings ride the whole-prompt wave path)"
-        if self.prefill_len is not None:
-            assert req.tokens.size <= self.prefill_len, \
-                (req.tokens.size, self.prefill_len)
+        if not np.issubdtype(req.tokens.dtype, np.integer):
+            raise AdmissionRejected("token backend takes int token prompts")
+        if self.chunk_size and req.frontend is not None:
+            raise AdmissionRejected(
+                "chunked prefill takes token prompts only (frontend "
+                "embeddings ride the whole-prompt wave path)")
+        if (self.prefill_len is not None
+                and req.tokens.size > self.prefill_len):
+            raise AdmissionRejected(
+                f"prompt of {req.tokens.size} tokens exceeds the pinned "
+                f"prefill_len={self.prefill_len}")
         if self._bounded_cache and self.paged:
             # paged: prompt + budget may exceed max_len (the PR-2 segment
             # bound is gone). The real bounds are the request's own
@@ -370,19 +412,20 @@ class TokenDecodeBackend(Backend):
                               f"prefix cache — admission would reserve "
                               f"{needed - hit} fresh pages but the table "
                               f"row still references all {needed}")
-            assert needed <= cap, \
-                f"paged mode: request footprint {needed} pages " \
-                f"(ceil((prompt {req.prompt_len} + budget " \
-                f"{req.max_new_tokens} - 1) / page_size {self.page_size}))" \
-                f"{shared} exceeds {cap} " \
-                f"(page-table row width {self.pages_per_slot}, " \
-                f"pool {self.n_pages} pages)"
+                raise AdmissionRejected(
+                    f"paged mode: request footprint {needed} pages "
+                    f"(ceil((prompt {req.prompt_len} + budget "
+                    f"{req.max_new_tokens} - 1) / page_size "
+                    f"{self.page_size})){shared} exceeds {cap} "
+                    f"(page-table row width {self.pages_per_slot}, "
+                    f"pool {self.n_pages} pages)")
         elif self._bounded_cache:
-            assert req.prompt_len + req.max_new_tokens <= self.max_len, \
-                f"contiguous mode: prompt {req.prompt_len} + budget " \
-                f"{req.max_new_tokens} exceeds the per-slot segment " \
-                f"max_len={self.max_len} (paged mode lifts this bound — " \
-                f"pass page_size)"
+            if req.prompt_len + req.max_new_tokens > self.max_len:
+                raise AdmissionRejected(
+                    f"contiguous mode: prompt {req.prompt_len} + budget "
+                    f"{req.max_new_tokens} exceeds the per-slot segment "
+                    f"max_len={self.max_len} (paged mode lifts this bound "
+                    f"— pass page_size)")
         # ring-KV keeps only the last `window` keys and SSM state is
         # constant-size, so those families accept prompts of any length
 
@@ -471,15 +514,29 @@ class TokenDecodeBackend(Backend):
 
     def grow_slots(self, growing: List[int]) -> None:
         """Allocate the next page for every growing slot and push the new
-        table rows to the device in one fixed-shape jitted scatter."""
+        table rows to the device in one fixed-shape jitted scatter.
+
+        ATOMIC (ISSUE 10): every check and allocation happens before any
+        host table mutates — a ``PoolExhausted`` (real or injected via
+        the fault plan) leaves ``_slot_pages`` and the device tables
+        exactly as they were, so the engine can contain it by preempting
+        the growing slots and retrying."""
+        if self.faults is not None and self.faults.alloc_fails():
+            raise PoolExhausted("injected page-alloc failure (fault plan)")
+        for slot in growing:
+            if len(self._slot_pages[slot]) + 1 > self.pages_per_slot:
+                raise PoolError(
+                    f"slot {slot} page table full "
+                    f"({self.pages_per_slot} rows) — admission validation "
+                    f"should have rejected this footprint")
         self._reclaim(len(growing))
+        grown = self._pool.grow(len(growing))   # all-or-nothing
         slot_ids = np.full((self.n_slots,), self.n_slots, np.int32)
         tables = np.full((self.n_slots, self.pages_per_slot), self.n_pages,
                          np.int32)
-        for i, slot in enumerate(growing):
+        for i, (slot, page) in enumerate(zip(growing, grown)):
             pages = self._slot_pages[slot]
-            pages += self._pool.grow(1)
-            assert len(pages) <= self.pages_per_slot, (slot, len(pages))
+            pages.append(page)
             slot_ids[i] = slot
             tables[i, :len(pages)] = pages
         self._cache = self._grow_tables(self._cache, jnp.asarray(slot_ids),
@@ -607,6 +664,10 @@ class TokenDecodeBackend(Backend):
                     self._n_cow += len(cow_src)
                 pages = kept + fresh
                 self._slot_pages[slot] = pages
+                # pages after the kept prefix are WRITTEN by this slot
+                # (novel tail, CoW copies, decode growth) — quarantine
+                # invalidates exactly those from the prefix index
+                self._slot_kept[slot] = len(kept)
                 slot_ids[i] = slot
                 tables[i, :len(pages)] = pages
             self._cache = self._grow_tables(self._cache,
@@ -718,14 +779,54 @@ class TokenDecodeBackend(Backend):
     def _sample(self, logits2d, mask: np.ndarray) -> np.ndarray:
         """Sample all slots; commit key/token state for ``mask`` slots only
         (keeping every request's key chain aligned with its token
-        count)."""
-        toks, new_keys = sample_tokens(logits2d, self._temps, self._topks,
-                                       self._keys, self._vocab)
-        m = jnp.asarray(mask)
+        count).
+
+        Guarded (ISSUE 10): before committing, the emitting slots'
+        logits are checked host-side for non-finite values — NaN, +inf,
+        or an all(-inf) row. ``max`` is the right reduction: -inf
+        entries are LEGITIMATE (vocab-padding mask, top-k truncation),
+        but the row maximum is finite for any sane distribution and
+        poisoned by any NaN. A guard trip withholds the slot's key/token
+        commit entirely (its PRNG chain stays aligned with its COMMITTED
+        token count, so the quarantine retry resumes bit-identically)
+        and records the slot in ``_guard_bad`` for the engine to
+        quarantine. Fault-plan ``nan`` injections overwrite the chosen
+        slots' logits on device first, so drills flow through the same
+        guard as real poison."""
+        if self.faults is not None:
+            bad = self.faults.nan_slots()
+            if bad:
+                rows = (jnp.arange(self.n_slots) if -1 in bad
+                        else jnp.asarray(sorted(bad)))
+                logits2d = jnp.asarray(logits2d).at[rows].set(jnp.nan)
+        commit = mask
+        if self.guards:
+            # fused sampler variant: the guard's row-max reduction rides
+            # the same dispatch as sampling, and the peak vector comes
+            # back in the same host transfer as the tokens — the guarded
+            # path costs no extra device round-trip over the unguarded
+            # one (gated at <= 5% overhead by check_bench).
+            toks, new_keys, peak_dev = sample_tokens_guarded(
+                logits2d, self._temps, self._topks, self._keys, self._vocab)
+            toks_h, peak = np.asarray(toks), np.asarray(peak_dev)
+            if mask.any():
+                trip = ~np.isfinite(peak) & mask
+                if trip.any():
+                    commit = mask & ~trip
+                    for s in np.nonzero(trip)[0]:
+                        self._guard_bad[int(s)] = (
+                            f"non-finite logits (row max {peak[s]!r}) at "
+                            f"slot {int(s)} — emission withheld")
+        else:
+            toks, new_keys = sample_tokens(logits2d, self._temps,
+                                           self._topks, self._keys,
+                                           self._vocab)
+            toks_h = np.asarray(toks)
+        m = jnp.asarray(commit)
         self._keys = jnp.where(m[:, None], new_keys, self._keys)
         self._last_tok = jnp.where(m[:, None], toks[:, None],
                                    self._last_tok)
-        return np.asarray(toks)
+        return toks_h
 
     # -- retire / preempt ------------------------------------------------
 
@@ -738,25 +839,37 @@ class TokenDecodeBackend(Backend):
         pages."""
         self._cache["length"] = self._cache["length"].at[slot].set(0)
         self._pending.pop(slot, None)
+        self._slot_kept.pop(slot, None)
         if self.paged:
             self._pool.free(self._slot_pages.pop(slot))
 
-    def snapshot(self, slot: int, st, emitted) -> Request:
-        """Preemption snapshot: generated-so-far folds into the prompt
-        (budget shrinks by the same amount), the PRNG key chain is
-        snapshotted into ``key_override``, the slot freezes (length 0) and
-        its pages return to the pool immediately. Re-prefill of prompt +
+    def quarantine(self, slot: int) -> None:
+        """Invalidate prefix-index entries for every page this slot WROTE
+        (everything after the shared prefix kept at admission): the
+        slot's prompt pages were indexed when its prefill finalized, so a
+        fault in the slot means other requests could match — and read —
+        content it produced. Pages it only SHARED are untouched:
+        copy-on-write guarantees a sharer never writes them, so their
+        content predates the fault."""
+        if self._prefix is None or slot not in self._slot_pages:
+            return
+        kept = self._slot_kept.get(slot, 0)
+        written = self._slot_pages[slot][kept:]
+        if written:
+            self._prefix.invalidate(written, self._pool)
+
+    def snapshot_request(self, slot: int, st, emitted) -> Request:
+        """The resumable request, PURE (no freeze/free — ``snapshot``
+        adds that): generated-so-far folds into the prompt (budget
+        shrinks by the same amount) and the PRNG key chain is
+        snapshotted into ``key_override``. Re-prefill of prompt +
         generated reproduces the exact cache the preempted decode had
         built — prefill/decode parity is the tested invariant.
 
-        A slot caught MID-CHUNKED-PREFILL has emitted nothing: its plan is
-        dropped and the original request re-queues whole (partial chunk
-        writes are dead — the lane froze at length 0 and the pages return
-        to the pool), so the resumed run is bit-identical by construction."""
-        self._cache["length"] = self._cache["length"].at[slot].set(0)
-        self._pending.pop(slot, None)
-        if self.paged:
-            self._pool.free(self._slot_pages.pop(slot))
+        A slot caught MID-CHUNKED-PREFILL has emitted nothing: the
+        original request re-queues whole (partial chunk writes are dead
+        once the lane freezes), so the resumed run is bit-identical by
+        construction."""
         req = st.req
         # guard the generated == 0 slice: [-0:] is the WHOLE list, and a
         # mid-chunk preemption is exactly the case that reaches it
@@ -767,6 +880,18 @@ class TokenDecodeBackend(Backend):
             req.max_new_tokens - st.generated, req.sampling, req.frontend,
             key_override=np.asarray(self._keys)[slot],
             priority=req.priority, on_token=req.on_token)
+
+    def snapshot(self, slot: int, st, emitted) -> Request:
+        """Preemption: build the resume request (``snapshot_request``),
+        then freeze the slot (length 0) and return its pages to the pool
+        immediately."""
+        resumed = self.snapshot_request(slot, st, emitted)
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        self._pending.pop(slot, None)
+        self._slot_kept.pop(slot, None)
+        if self.paged:
+            self._pool.free(self._slot_pages.pop(slot))
+        return resumed
 
     def stats(self) -> dict:
         if not self.paged:
@@ -785,6 +910,7 @@ class TokenDecodeBackend(Backend):
                 "cow_copies": self._n_cow,
                 "evictions": self._prefix.n_evicted,
                 "collisions_rejected": self._prefix.n_rejected,
+                "invalidated": self._prefix.n_invalidated,
             }
         return out
 
@@ -818,6 +944,7 @@ class PairBatchBackend(Backend):
         self.model, self.params = model, params
         self.max_len, self.n_slots = max_len, n_slots
         self.factors = factors
+        self._guard_bad: Dict[int, str] = {}
         self._cache = None
 
         def _pf(p, feats, lengths, factors, max_len):
@@ -834,12 +961,16 @@ class PairBatchBackend(Backend):
                                                 factors=self.factors)
 
     def validate(self, req: Request) -> None:
-        assert req.tokens.dtype == np.float32 and req.tokens.ndim == 2, \
-            "pair request payload must be a float (n_res, F) feature array"
-        assert req.tokens.shape[0] <= self.max_len, \
-            f"complex has {req.tokens.shape[0]} residues; slot batch is " \
-            f"padded to max_len={self.max_len}"
-        assert req.frontend is None, "pair requests carry no frontend"
+        if req.tokens.dtype != np.float32 or req.tokens.ndim != 2:
+            raise AdmissionRejected(
+                "pair request payload must be a float (n_res, F) feature "
+                "array")
+        if req.tokens.shape[0] > self.max_len:
+            raise AdmissionRejected(
+                f"complex has {req.tokens.shape[0]} residues; slot batch "
+                f"is padded to max_len={self.max_len}")
+        if req.frontend is not None:
+            raise AdmissionRejected("pair requests carry no frontend")
 
     def admit(self, wave: List[Request], slots: List[int]):
         """Trunk pass over the padded wave; scatter per-layer bias state
@@ -855,6 +986,24 @@ class PairBatchBackend(Backend):
         _, wave_cache = self._prefill(self.params, jnp.asarray(feats),
                                       jnp.asarray(lengths), self.factors,
                                       self.max_len)
+        if self.guards:
+            # admission-time factor guard (ISSUE 10): the trunk ran once
+            # and its cached per-layer bias state is frozen for every
+            # refinement step — a NaN/Inf here (bad features, unstable
+            # factorization) poisons ALL of the request's steps, so catch
+            # it now, per wave row, before the engine registers the slot
+            flags = [jnp.isfinite(leaf).all(axis=tuple(range(1, leaf.ndim)))
+                     for leaf in jax.tree_util.tree_leaves(wave_cache)
+                     if jnp.issubdtype(leaf.dtype, jnp.floating)
+                     and leaf.ndim >= 1 and leaf.shape[0] == ns]
+            if flags:
+                ok = np.asarray(functools.reduce(jnp.logical_and, flags))
+                for i in range(w):
+                    if not ok[i]:
+                        self._guard_bad[slots[i]] = (
+                            f"non-finite factor cache at admission of "
+                            f"slot {slots[i]} (trunk produced NaN/Inf "
+                            f"from the complex features)")
         slot_ids = np.full((ns,), ns, np.int32)    # padding rows -> dropped
         slot_ids[:w] = slots
         self._cache = self._insert(self._cache, wave_cache,
@@ -883,12 +1032,17 @@ class PairBatchBackend(Backend):
     def release(self, slot: int) -> None:
         self._cache["length"] = self._cache["length"].at[slot].set(0)
 
-    def snapshot(self, slot: int, st, emitted) -> Request:
-        """Preemption = restart: freeze the slot and re-queue the original
-        request with its full budget (no incremental output was emitted,
-        so the re-run is deterministic by construction)."""
-        self._cache["length"] = self._cache["length"].at[slot].set(0)
+    def snapshot_request(self, slot: int, st, emitted) -> Request:
+        """Preemption = restart: the resume request is the ORIGINAL with
+        its full budget (no incremental output was emitted, so the
+        re-run is deterministic by construction). Pure — ``snapshot``
+        adds the freeze."""
         req = st.req
         return Request(req.rid, req.tokens, req.max_new_tokens,
                        req.sampling, req.frontend, priority=req.priority,
                        on_token=req.on_token)
+
+    def snapshot(self, slot: int, st, emitted) -> Request:
+        resumed = self.snapshot_request(slot, st, emitted)
+        self._cache["length"] = self._cache["length"].at[slot].set(0)
+        return resumed

@@ -36,6 +36,21 @@ ISSUEs 3-5 (see serve/README.md §Paged KV): when the pool runs dry the
 engine preempts the lowest-priority live request (lowest priority class,
 then latest arrival), whose snapshot re-enters at the head of the queue —
 greedy outputs are bit-identical to the never-preempted run.
+
+FAULT TOLERANCE (ISSUE 10, serve/README.md §Failure semantics): every
+request carries a lifecycle record (``QUEUED -> RUNNING -> OK / FAILED /
+TIMED_OUT / CANCELLED / REJECTED``); ``result`` returns a
+``RequestRecord`` — the result array plus its status and structured
+error. Host-side non-finite guards on emissions (and on the pair
+backend's admission-time factor caches) QUARANTINE a faulting slot
+through the preemption-snapshot machinery: its emission is withheld, its
+written prefix pages are invalidated from the index, and its request
+retries bit-identically up to ``max_retries`` before terminating FAILED.
+Pool exhaustion and injected step faults are contained the same way
+(preempt + retry, never crash). ``snapshot_engine`` serializes the whole
+host state for crash-safe restore on a fresh engine, and a
+``serve.faults.FaultPlan`` drives all of it deterministically in the
+chaos suite (tests/test_faults.py).
 """
 from __future__ import annotations
 
@@ -47,10 +62,17 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.serve.backend import PairBatchBackend, TokenDecodeBackend
+from repro.serve.faults import FaultPlan
+from repro.serve.lifecycle import (
+    CANCELLED, FAILED, OK, QUEUED, REJECTED, RUNNING, TERMINAL_STATUSES,
+    TIMED_OUT, AdmissionRejected, EngineStalled, InjectedFault,
+    PoolExhausted, RequestNotLive, RequestRecord)
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import FIFOScheduler, Request
 
 __all__ = ["ServeEngine"]
+
+_SNAPSHOT_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -63,6 +85,33 @@ class _Slot:
     req: Request
     generated: int = 0
     length: int = 0
+
+
+@dataclasses.dataclass
+class _ReqMeta:
+    """Lifecycle record of one request (host bookkeeping, ISSUE 10)."""
+    status: str = QUEUED
+    error: Optional[dict] = None
+    retries: int = 0                  # quarantine retries consumed
+    max_retries: int = 1
+    deadline: Optional[int] = None    # absolute engine step, None = never
+
+
+def _ser_arr(x) -> dict:
+    """JSON-serializable encoding of a result payload: a token-id list
+    (mid-flight token results) or an ndarray (prompts, keys, pair
+    results)."""
+    if isinstance(x, np.ndarray):
+        return {"kind": "array", "dtype": str(x.dtype),
+                "shape": list(x.shape), "data": x.ravel().tolist()}
+    return {"kind": "ids", "data": [int(t) for t in x]}
+
+
+def _de_arr(d: dict):
+    if d["kind"] == "array":
+        return np.asarray(d["data"], dtype=np.dtype(d["dtype"])).reshape(
+            d["shape"])
+    return list(d["data"])
 
 
 class ServeEngine:
@@ -121,6 +170,16 @@ class ServeEngine:
             explicit shardings — KV/pools along ``kv_heads``, slot rows
             along ``batch`` — while the page allocator and tables stay
             host-side. None serves single-device, unchanged.
+        guards: host-side non-finite emission/admission guards
+            (ISSUE 10, default on — the ``guard_overhead`` bench gates
+            their cost at <= 5%). Off restores the pre-lifecycle
+            behavior: poison flows into results undetected.
+        faults: a ``serve.faults.FaultPlan`` for deterministic fault
+            injection (chaos drills). None (default) injects nothing.
+        stall_limit: ``run()`` raises ``EngineStalled`` after this many
+            consecutive steps with queued/live work but zero progress
+            (no admission, no chunk landed, no token committed, no
+            preemption) — a diagnostic instead of an infinite spin.
     """
 
     def __init__(self, model: Model, params: dict, max_len: int = 1024,
@@ -134,18 +193,23 @@ class ServeEngine:
                  factors: Optional[dict] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
-                 mesh=None, rules=None):
-        assert model.prefill is not None and model.decode is not None, \
-            "model is not serve-capable"
-        assert page_reservation in ("lazy", "whole"), page_reservation
+                 mesh=None, rules=None,
+                 guards: bool = True,
+                 faults: Optional[FaultPlan] = None,
+                 stall_limit: int = 64):
+        if model.prefill is None or model.decode is None:
+            raise ValueError("model is not serve-capable (needs "
+                             "prefill/decode programs)")
+        if stall_limit < 1:
+            raise ValueError(f"stall_limit must be >= 1, got {stall_limit}")
         self.model, self.params = model, params
         self.max_len, self.eos_id = max_len, eos_id
         self.n_slots, self.prefill_len = n_slots, prefill_len
         if model.cfg.family == "pairformer":
-            assert prefill_chunk is None and mesh is None \
-                and not prefix_cache, \
-                "chunked prefill / prefix cache / mesh sharding are " \
-                "token-backend paths"
+            if prefill_chunk is not None or mesh is not None or prefix_cache:
+                raise ValueError(
+                    "chunked prefill / prefix cache / mesh sharding are "
+                    "token-backend paths")
             self.backend = PairBatchBackend(model, params, max_len=max_len,
                                             n_slots=n_slots, factors=factors)
         else:
@@ -160,13 +224,23 @@ class ServeEngine:
             self.page_size = self.backend.page_size
             self.n_pages = self.backend.n_pages
             self.pages_per_slot = self.backend.pages_per_slot
+        self.guards = guards
+        self.backend.guards = guards
+        self.faults = faults
+        self.backend.faults = faults
+        self.stall_limit = stall_limit
+        self.step_idx = 0               # engine steps taken (fault clock)
         self.n_preemptions = 0
+        self.n_quarantines = 0          # guard trips contained
+        self.n_faults_contained = 0     # step/alloc faults contained
         self.scheduler = FIFOScheduler(policy=scheduler_policy)
         self._next_rid = 0
         self._results: Dict[int, object] = {}   # rid -> [ids] | result array
         self._done: Dict[int, bool] = {}
+        self._meta: Dict[int, _ReqMeta] = {}    # rid -> lifecycle record
         self._live: Dict[int, _Slot] = {}         # slot -> _Slot
         self._free: List[int] = list(range(n_slots))
+        self._advanced = 0              # committed budget units (stall sig)
 
     # -- legacy aliases: device state lives in the backend now, but the
     # -- pre-ISSUE-6 attribute names remain the observable surface used by
@@ -201,7 +275,9 @@ class ServeEngine:
     def submit(self, tokens, max_new_tokens: int,
                sampling: Optional[SamplingParams] = None,
                frontend: Optional[np.ndarray] = None,
-               priority: int = 0, on_token=None) -> int:
+               priority: int = 0, on_token=None,
+               deadline_steps: Optional[int] = None,
+               max_retries: int = 1, strict: bool = True) -> int:
         """Queue one request; returns its request id.
 
         ``priority`` is the request's class: higher admits before lower
@@ -214,29 +290,116 @@ class ServeEngine:
         id (token backend) or the backend's per-step ``stream_result``
         (pair backend — the current single rep). The callback rides the
         request descriptor, so it survives preemption and resume.
+
+        ``deadline_steps`` (ISSUE 10): the request terminates
+        ``TIMED_OUT`` (keeping its partial result) if still incomplete
+        after this many further engine steps. None = no deadline.
+
+        ``max_retries``: quarantine retries before a guard-tripping
+        request terminates ``FAILED`` (each retry resumes bit-identically
+        from its preemption snapshot).
+
+        ``strict``: when False, a request that fails admission validation
+        returns a rid whose record is terminal ``REJECTED`` (with the
+        validation message as its error) instead of raising
+        ``AdmissionRejected``.
         """
+        if deadline_steps is not None and deadline_steps < 1:
+            raise ValueError(
+                f"deadline_steps must be >= 1, got {deadline_steps}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, np.asarray(tokens), max_new_tokens,
-                      sampling or SamplingParams(), frontend,
-                      priority=priority, on_token=on_token)
-        self.backend.validate(req)
+        deadline = (None if deadline_steps is None
+                    else self.step_idx + deadline_steps)
         self._results[rid] = []
         self._done[rid] = False
+        self._meta[rid] = _ReqMeta(max_retries=max_retries,
+                                   deadline=deadline)
+        try:
+            req = Request(rid, np.asarray(tokens), max_new_tokens,
+                          sampling or SamplingParams(), frontend,
+                          priority=priority, on_token=on_token)
+            self.backend.validate(req)
+        except AdmissionRejected as e:
+            if strict:
+                del self._results[rid], self._done[rid], self._meta[rid]
+                raise
+            self._finish(rid, REJECTED,
+                         error={"kind": "admission", "detail": str(e)})
+            return rid
         self.scheduler.add(req)
         return rid
 
-    def result(self, rid: int):
-        """Result so far for ``rid`` (complete iff ``is_done``): generated
-        ids for the token backend, the final (n_res, d_model) single
-        representation for the pair backend."""
+    def result(self, rid: int) -> RequestRecord:
+        """The ``(status, tokens, error)`` record for ``rid`` — a
+        ``RequestRecord``: the result array so far (complete iff
+        ``is_done``) carrying ``status`` and ``error`` attributes.
+        Generated ids for the token backend, the final (n_res, d_model)
+        single representation for the pair backend."""
+        if rid not in self._results:
+            raise RequestNotLive(f"unknown request id {rid}")
         res = self._results[rid]
-        if isinstance(res, np.ndarray):
-            return res
-        return np.asarray(res, np.int32)
+        meta = self._meta[rid]
+        if not isinstance(res, np.ndarray):
+            res = np.asarray(res, np.int32)
+        return RequestRecord(res, status=meta.status, error=meta.error)
+
+    def status(self, rid: int) -> str:
+        """Lifecycle status of ``rid`` (see serve.lifecycle)."""
+        if rid not in self._meta:
+            raise RequestNotLive(f"unknown request id {rid}")
+        return self._meta[rid].status
+
+    def status_counts(self) -> Dict[str, int]:
+        """{status: count} over every submitted request (the launcher's
+        final stats line)."""
+        counts: Dict[str, int] = {}
+        for meta in self._meta.values():
+            counts[meta.status] = counts.get(meta.status, 0) + 1
+        return counts
+
+    def cancel(self, rid: int) -> bool:
+        """Terminate ``rid`` as ``CANCELLED``, releasing its slot/pages.
+
+        Returns True if the cancel landed, False if the request already
+        reached a terminal status (too late to cancel). Unknown rids
+        raise ``RequestNotLive``. The partial result (tokens emitted
+        before the cancel) stays readable via ``result``."""
+        meta = self._meta.get(rid)
+        if meta is None:
+            raise RequestNotLive(f"unknown request id {rid}")
+        if meta.status in TERMINAL_STATUSES:
+            return False
+        if self.scheduler.remove(rid) is None:
+            slots = [s for s, st in self._live.items()
+                     if st.req.rid == rid]
+            if not slots:
+                raise RequestNotLive(
+                    f"request {rid} is neither queued nor in flight")
+            self._retire_slot(slots[0])
+        self._finish(rid, CANCELLED)
+        return True
 
     def is_done(self, rid: int) -> bool:
+        if rid not in self._done:
+            raise RequestNotLive(f"unknown request id {rid}")
         return self._done[rid]
+
+    def _finish(self, rid: int, status: str,
+                error: Optional[dict] = None) -> None:
+        meta = self._meta[rid]
+        meta.status = status
+        if error is not None:
+            meta.error = error
+        self._done[rid] = True
+
+    def _retire_slot(self, slot: int) -> None:
+        """Pop a live slot and free its backend resources (no requeue)."""
+        del self._live[slot]
+        bisect.insort(self._free, slot)
+        self.backend.release(slot)
 
     @property
     def occupancy(self) -> int:
@@ -247,6 +410,8 @@ class ServeEngine:
         stats = self.backend.stats()
         if stats:
             stats["preemptions"] = self.n_preemptions
+            stats["quarantines"] = self.n_quarantines
+            stats["faults_contained"] = self.n_faults_contained
         return stats
 
     # ------------------------------------------------------------------
@@ -256,7 +421,8 @@ class ServeEngine:
     def step(self) -> List[int]:
         """Admit queued requests into free slots, advance every pending
         prompt one prefill chunk, then advance every decoding slot one
-        budget unit. Returns rids that finished this step.
+        budget unit. Returns rids that reached a terminal status this
+        step (OK and TIMED_OUT alike).
 
         The chunk/decode INTERLEAVE is the chunked-prefill latency
         contract: each engine step costs the decode batch exactly one
@@ -264,21 +430,82 @@ class ServeEngine:
         chunk per step instead of stalling the whole batch behind a
         monolithic prompt prefill."""
         self._ensure_state()
-        finished = []
-        if self._free and len(self.scheduler):
+        if self.faults is not None:
+            self.faults.tick(self.step_idx)
+        finished = self._expire_deadlines()
+        delayed = (self.faults is not None
+                   and self.faults.admission_delayed())
+        if self._free and len(self.scheduler) and not delayed:
             finished += self.admit()
         if self.backend.prefill_pending():
             emissions, mask = self.backend.prefill_step()
-            finished += self._commit(emissions, mask)
+            finished += self._commit_guarded(emissions, mask)
         if self._live:
-            finished += self.decode()
+            try:
+                finished += self.decode()
+            except InjectedFault:
+                # a failed jitted step dispatched nothing and advanced no
+                # state — containment is retrying next step
+                self.n_faults_contained += 1
+        self.step_idx += 1
         return finished
 
     def run(self) -> None:
-        """Step until the queue and all slots drain."""
+        """Step until the queue and all slots drain.
+
+        Stall guard (ISSUE 10): ``stall_limit`` consecutive steps with
+        work outstanding but NO progress — no admission, no chunk
+        landed, no budget unit committed, no preemption/quarantine, no
+        terminal transition — raise ``EngineStalled`` with queue/pool/
+        slot diagnostics instead of spinning forever."""
         self._ensure_state()
+        idle = 0
         while self._live or len(self.scheduler):
+            before = self._progress_sig()
             self.step()
+            if self._progress_sig() == before:
+                idle += 1
+                if idle >= self.stall_limit:
+                    raise EngineStalled(
+                        f"no progress for {idle} consecutive steps: "
+                        f"{len(self.scheduler)} queued, "
+                        f"{len(self._live)} live "
+                        f"(slots {sorted(self._live)}), "
+                        f"free slots {self._free}, "
+                        f"page stats {self.page_stats() or None}, "
+                        f"statuses {self.status_counts()}")
+            else:
+                idle = 0
+
+    def _progress_sig(self) -> tuple:
+        """Everything that changes when the engine makes progress —
+        compared across steps by the ``run`` stall guard."""
+        pending = getattr(self.backend, "_pending", None) or {}
+        return (len(self.scheduler), len(self._live), self._advanced,
+                self.n_preemptions, self.n_quarantines,
+                sum(self._done.values()),
+                tuple(sorted((s, p.done) for s, p in pending.items())))
+
+    def _expire_deadlines(self) -> List[int]:
+        """Terminate every queued/live request whose deadline elapsed
+        (TIMED_OUT, partial result retained)."""
+        expired: List[int] = []
+        for req in self.scheduler.queued():
+            meta = self._meta[req.rid]
+            if meta.deadline is not None and self.step_idx >= meta.deadline:
+                self.scheduler.remove(req.rid)
+                expired.append(req.rid)
+        for slot in sorted(self._live):
+            meta = self._meta[self._live[slot].req.rid]
+            if meta.deadline is not None and self.step_idx >= meta.deadline:
+                expired.append(self._live[slot].req.rid)
+                self._retire_slot(slot)
+        for rid in expired:
+            self._finish(rid, TIMED_OUT, error={
+                "kind": "deadline", "step": self.step_idx,
+                "detail": f"deadline (step {self._meta[rid].deadline}) "
+                          f"elapsed before completion"})
+        return expired
 
     def _take_wave(self) -> List[Request]:
         """Pop the next admission wave: one request per free slot, gated in
@@ -324,18 +551,27 @@ class ServeEngine:
         emissions, mask = self.backend.admit(wave, slots)
         for slot, r in zip(slots, wave):
             self._live[slot] = _Slot(r, length=r.prompt_len)
-        return self._commit(emissions, mask)
+            self._meta[r.rid].status = RUNNING
+        return self._commit_guarded(emissions, mask)
 
     def decode(self) -> List[int]:
         """Advance every live slot one budget unit in one jitted backend
         step. Lazy paged mode first grows any slot whose write position
         crossed a page boundary — preempting the lowest-priority request
         while the pool is dry — so the jitted step itself never
-        allocates."""
+        allocates.
+
+        Fault containment (ISSUE 10): an injected step fault skips the
+        dispatch (nothing advanced — the retry next iteration is free);
+        a ``PoolExhausted`` escaping growth (injected, or an accounting
+        bug) preempts the growing slots — their snapshots resume
+        bit-identically — instead of crashing the engine."""
         self._ensure_state()
         pending = self.backend.pending_slots()
         if pending and all(s in pending for s in self._live):
             return []               # nothing decoding yet — chunks only
+        if self.faults is not None and self.faults.step_fails():
+            raise InjectedFault("injected decode-step failure (fault plan)")
         if self.backend.lazy:
             # when the pool can't cover the growth, preempt lowest-
             # priority live requests (possibly a growing request itself —
@@ -350,11 +586,20 @@ class ServeEngine:
                 self._preempt_slot(victim)
                 growing = [s for s in growing if s != victim]
             if growing:
-                self.backend.grow_slots(growing)
+                try:
+                    self.backend.grow_slots(growing)
+                except PoolExhausted:
+                    # growth is atomic (no partial table state): preempt
+                    # the growing slots — snapshots resume bit-identically
+                    # — and let the rest of the batch proceed
+                    self.n_faults_contained += 1
+                    for slot in growing:
+                        if slot in self._live:
+                            self._preempt_slot(slot)
         if not self._live:
             return []
         emissions, mask = self.backend.step(self._live)
-        return self._commit(emissions, mask)
+        return self._commit_guarded(emissions, mask)
 
     def generate(self, prompts, max_new_tokens: int, frontend=None,
                  sampling: Optional[SamplingParams] = None) -> np.ndarray:
@@ -364,9 +609,10 @@ class ServeEngine:
         Returns (B, max_new_tokens) generated ids; rows that stop early at
         ``eos_id`` pad the remaining columns with ``eos_id``.
         """
-        assert isinstance(self.backend, TokenDecodeBackend), \
-            "generate() is a token-emitting API; submit()/result() serve " \
-            "pair requests"
+        if not isinstance(self.backend, TokenDecodeBackend):
+            raise TypeError(
+                "generate() is a token-emitting API; submit()/result() "
+                "serve pair requests")
         rows = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
         rids = [self.submit(row, max_new_tokens, sampling=sampling,
                             frontend=None if frontend is None
@@ -409,7 +655,8 @@ class ServeEngine:
         else:
             matches = [s for s, st in self._live.items()
                        if st.req.rid == rid]
-            assert matches, f"request {rid} is not in flight"
+            if not matches:
+                raise RequestNotLive(f"request {rid} is not in flight")
             slot = matches[0]
         return self._preempt_slot(slot)
 
@@ -428,8 +675,189 @@ class ServeEngine:
         bisect.insort(self._free, slot)
         resumed = self.backend.snapshot(slot, st, self._results[st.req.rid])
         self.scheduler.add_front(resumed)
+        self._meta[st.req.rid].status = QUEUED
         self.n_preemptions += 1
         return st.req.rid
+
+    # ------------------------------------------------------------------
+    # Fault containment (ISSUE 10)
+    # ------------------------------------------------------------------
+
+    def _quarantine(self, slot: int, detail: str) -> List[int]:
+        """Contain a guard trip on ``slot``: invalidate anything other
+        requests could observe from it (written prefix pages), then
+        either RETRY — the preemption snapshot resumes the request
+        bit-identically, its budget and emitted-so-far intact — or, when
+        ``max_retries`` is spent, terminate it FAILED with a structured
+        error. Pool state stays intact either way (freed pages return to
+        the free list; nothing leaks)."""
+        st = self._live[slot]
+        rid = st.req.rid
+        meta = self._meta[rid]
+        self.backend.quarantine(slot)
+        self.n_quarantines += 1
+        if meta.retries < meta.max_retries:
+            meta.retries += 1
+            self._preempt_slot(slot)
+            return []
+        error = {"kind": "guard", "slot": slot, "step": self.step_idx,
+                 "retries": meta.retries, "detail": detail}
+        self._retire_slot(slot)
+        self._finish(rid, FAILED, error)
+        return [rid]
+
+    def _commit_guarded(self, emissions: Optional[np.ndarray],
+                        mask: np.ndarray) -> List[int]:
+        """Drain the backend's guard verdicts BEFORE committing: a slot
+        that tripped the non-finite guard this call has its emission
+        withheld (the backend already withheld its PRNG/token commit) and
+        is quarantined; everything else commits normally."""
+        finished: List[int] = []
+        if self.guards:
+            for slot, detail in sorted(
+                    self.backend.take_guard_faults().items()):
+                if slot in self._live:
+                    mask[slot] = False
+                    finished += self._quarantine(slot, detail)
+        return finished + self._commit(emissions, mask)
+
+    # ------------------------------------------------------------------
+    # Crash-safe checkpoint / restore (ISSUE 10)
+    # ------------------------------------------------------------------
+
+    def _ser_req(self, req: Request) -> dict:
+        """Serialize one request descriptor. ``on_token`` callbacks are
+        host closures and cannot survive a process boundary — they are
+        dropped (documented in serve/README.md §Failure semantics)."""
+        return {
+            "rid": req.rid,
+            "tokens": _ser_arr(np.asarray(req.tokens)),
+            "max_new_tokens": req.max_new_tokens,
+            "sampling": {"temperature": req.sampling.temperature,
+                         "top_k": req.sampling.top_k,
+                         "seed": req.sampling.seed},
+            "frontend": (None if req.frontend is None
+                         else _ser_arr(np.asarray(req.frontend))),
+            "key_override": (None if req.key_override is None
+                             else _ser_arr(np.asarray(req.key_override))),
+            "priority": req.priority,
+        }
+
+    def _de_req(self, d: dict) -> Request:
+        return Request(
+            d["rid"], _de_arr(d["tokens"]), d["max_new_tokens"],
+            SamplingParams(d["sampling"]["temperature"],
+                           d["sampling"]["top_k"], d["sampling"]["seed"]),
+            None if d["frontend"] is None else _de_arr(d["frontend"]),
+            key_override=(None if d["key_override"] is None
+                          else np.asarray(_de_arr(d["key_override"]),
+                                          np.uint32)),
+            priority=d["priority"])
+
+    def _config_sig(self) -> dict:
+        """The config facts a restore target must agree on."""
+        backend = self.backend
+        return {"family": self.model.cfg.family, "arch": self.model.cfg.name,
+                "n_slots": self.n_slots, "max_len": self.max_len,
+                "prefill_len": self.prefill_len,
+                "paged": backend.paged, "lazy": backend.lazy,
+                "page_size": getattr(backend, "page_size", None),
+                "n_pages": getattr(backend, "n_pages", None),
+                "chunk_size": getattr(backend, "chunk_size", None),
+                "prefix_cache": getattr(backend, "_prefix", None)
+                is not None}
+
+    def snapshot_engine(self) -> dict:
+        """Serialize ALL host state to a JSON-compatible dict, without
+        perturbing the running engine: lifecycle records, results so
+        far, scheduler queues, and every live slot as its preemption-
+        snapshot resume request (generated folded into the prompt, PRNG
+        chain in ``key_override`` — the exact state the bit-identical
+        preemption/resume contract is built on; a mid-ChunkPlan slot
+        serializes as its whole original request, nothing emitted yet).
+
+        Device state is deliberately NOT captured: pages, caches and the
+        prefix index are rebuilt by re-prefill on the restored engine,
+        which the parity contracts make bit-identical. Prefix-index
+        chain digests ride along for audit only.
+
+        ``restore_engine`` on a freshly constructed engine of the same
+        config resumes the workload bit-identically (greedy and
+        sampled), for every cache family."""
+        front, arrivals = self.scheduler.snapshot()
+        live = [self._ser_req(self.backend.snapshot_request(
+                    slot, st, self._results[st.req.rid]))
+                for slot, st in sorted(self._live.items())]
+        prefix = getattr(self.backend, "_prefix", None)
+        return {
+            "version": _SNAPSHOT_VERSION,
+            "config": self._config_sig(),
+            "step_idx": self.step_idx,
+            "next_rid": self._next_rid,
+            "counters": {"preemptions": self.n_preemptions,
+                         "quarantines": self.n_quarantines,
+                         "faults_contained": self.n_faults_contained,
+                         "advanced": self._advanced},
+            "meta": {str(rid): {"status": m.status, "error": m.error,
+                                "retries": m.retries,
+                                "max_retries": m.max_retries,
+                                "deadline": m.deadline}
+                     for rid, m in self._meta.items()},
+            "results": {str(rid): _ser_arr(res)
+                        for rid, res in self._results.items()},
+            "done": {str(rid): bool(v) for rid, v in self._done.items()},
+            "queue": {"front": [self._ser_req(r) for r in front],
+                      "arrivals": [self._ser_req(r) for r in arrivals]},
+            "live": live,
+            "prefix_digests": ([k.hex() for k in prefix._entries]
+                               if prefix is not None else []),
+        }
+
+    def restore_engine(self, state: dict) -> None:
+        """Rebuild the checkpointed host state on THIS engine (freshly
+        constructed, same config, nothing submitted). Live requests
+        re-enter at the head of the queue exactly as preempted requests
+        do; the next ``run()``/``step()`` re-admits and resumes them
+        bit-identically."""
+        if state.get("version") != _SNAPSHOT_VERSION:
+            raise ValueError(
+                f"engine snapshot version {state.get('version')!r} != "
+                f"{_SNAPSHOT_VERSION} — refusing to restore")
+        if self._live or len(self.scheduler) or self._results:
+            raise ValueError("restore_engine needs a fresh engine: this "
+                             "one already has requests")
+        mine, theirs = self._config_sig(), state["config"]
+        if mine != theirs:
+            diff = {k: (theirs.get(k), mine.get(k))
+                    for k in set(mine) | set(theirs)
+                    if theirs.get(k) != mine.get(k)}
+            raise ValueError(f"engine config mismatch (snapshot vs this "
+                             f"engine): {diff}")
+        self.step_idx = state["step_idx"]
+        self._next_rid = state["next_rid"]
+        counters = state["counters"]
+        self.n_preemptions = counters["preemptions"]
+        self.n_quarantines = counters["quarantines"]
+        self.n_faults_contained = counters["faults_contained"]
+        self._advanced = counters["advanced"]
+        self._meta = {int(rid): _ReqMeta(status=m["status"],
+                                         error=m["error"],
+                                         retries=m["retries"],
+                                         max_retries=m["max_retries"],
+                                         deadline=m["deadline"])
+                      for rid, m in state["meta"].items()}
+        self._results = {int(rid): _de_arr(res)
+                         for rid, res in state["results"].items()}
+        self._done = {int(rid): v for rid, v in state["done"].items()}
+        live = [self._de_req(d) for d in state["live"]]
+        front = [self._de_req(d) for d in state["queue"]["front"]]
+        arrivals = [self._de_req(d) for d in state["queue"]["arrivals"]]
+        for req in live:
+            # a live slot resumes the way a preempted request does: at
+            # the queue head, QUEUED until re-admission
+            self._meta[req.rid].status = QUEUED
+        self.scheduler.restore(
+            sorted(live + front, key=lambda r: r._order), arrivals)
 
     # ------------------------------------------------------------------
     # Internals
@@ -453,6 +881,7 @@ class ServeEngine:
             if t is not None:
                 self._results[st.req.rid].append(t)
             st.generated += 1
+            self._advanced += 1
             if st.req.on_token is not None:
                 # streaming: emitted id for token backends; non-emitting
                 # backends drain their per-step output instead
@@ -463,7 +892,7 @@ class ServeEngine:
                 res = self.backend.fetch_result(slot, st)
                 if res is not None:
                     self._results[st.req.rid] = res
-                self._done[st.req.rid] = True
+                self._finish(st.req.rid, OK)
                 finished.append(st.req.rid)
                 del self._live[slot]
                 bisect.insort(self._free, slot)

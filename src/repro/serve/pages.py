@@ -35,11 +35,21 @@ list only when its last holder lets go. ``free`` reports which pages
 actually drained so callers (the prefix index) can invalidate entries.
 Decref of a page that is already free is still rejected loudly — the
 double-free tripwire survives sharing.
+
+Since ISSUE 10 every failure is TYPED (``serve/lifecycle.py``) so it
+survives ``python -O`` and callers can contain it: exhaustion raises
+``PoolExhausted`` (a ``MemoryError`` subclass — pre-lifecycle callers
+keep working) and accounting violations (double free, incref of a free
+page, double allocation, out-of-range page id) raise ``PoolError``. The
+failed operation never applies, so the pool stays consistent after a
+caught error.
 """
 from __future__ import annotations
 
 import heapq
 from typing import Iterable, List
+
+from repro.serve.lifecycle import PoolError, PoolExhausted
 
 __all__ = ["PagePool"]
 
@@ -48,7 +58,9 @@ class PagePool:
     """Host-side allocator over ``n_pages`` pages of ``page_size`` tokens."""
 
     def __init__(self, n_pages: int, page_size: int):
-        assert n_pages >= 1 and page_size >= 1, (n_pages, page_size)
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(f"PagePool needs n_pages >= 1 and "
+                             f"page_size >= 1, got ({n_pages}, {page_size})")
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages))   # heap, lowest first
@@ -90,21 +102,30 @@ class PagePool:
 
     def refcount(self, page: int) -> int:
         """Holders of ``page`` (requests + the prefix index). 0 = free."""
-        assert 0 <= page < self.n_pages, page
+        self._check_page(page)
         return self._refs[page]
+
+    def _check_page(self, page: int) -> None:
+        if not 0 <= page < self.n_pages:
+            raise PoolError(f"page id {page} outside pool "
+                            f"[0, {self.n_pages})")
 
     # ------------------------------------------------------------------
     # Alloc / grow / incref / free
     # ------------------------------------------------------------------
 
     def alloc(self, n: int) -> List[int]:
-        """Take ``n`` pages (lowest free indices). Raises MemoryError when
-        the pool can't cover the request — callers gate on ``can_alloc``."""
+        """Take ``n`` pages (lowest free indices). Raises ``PoolExhausted``
+        (a MemoryError) when the pool can't cover the request — callers
+        gate on ``can_alloc``. All-or-nothing: a failed alloc takes no
+        pages, so containment code can retry after freeing."""
         if n > self.n_free:
-            raise MemoryError(f"PagePool: want {n} pages, {self.n_free} free")
+            raise PoolExhausted(
+                f"PagePool: want {n} pages, {self.n_free} free")
         pages = [heapq.heappop(self._free) for _ in range(n)]
         for p in pages:
-            assert self._refs[p] == 0, f"double allocation of page {p}"
+            if self._refs[p] != 0:
+                raise PoolError(f"double allocation of page {p}")
             self._refs[p] = 1
         self._watermark = max(self._watermark, self.n_used)
         return pages
@@ -122,9 +143,12 @@ class PagePool:
         """Add a holder to already-allocated pages (prefix sharing: a new
         request maps its page table onto pages some other holder owns).
         Incref of a free page is an error — sharing never resurrects."""
+        pages = list(pages)
         for p in pages:
-            assert 0 <= p < self.n_pages, p
-            assert self._refs[p] > 0, f"incref of free page {p}"
+            self._check_page(p)
+            if self._refs[p] <= 0:
+                raise PoolError(f"incref of free page {p}")
+        for p in pages:
             self._refs[p] += 1
 
     def free(self, pages: Iterable[int]) -> List[int]:
@@ -132,10 +156,13 @@ class PagePool:
         to the free list. Decref of a free page (double free) is an error.
         Returns the pages that actually drained, so the prefix index can
         drop entries that no longer point at live content."""
+        pages = list(pages)
+        for p in pages:
+            self._check_page(p)
+            if self._refs[p] <= 0:
+                raise PoolError(f"double free of page {p}")
         freed: List[int] = []
         for p in pages:
-            assert 0 <= p < self.n_pages, p
-            assert self._refs[p] > 0, f"double free of page {p}"
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 heapq.heappush(self._free, p)

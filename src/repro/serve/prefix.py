@@ -68,13 +68,15 @@ class PrefixCache:
 
     def __init__(self, page_size: int,
                  digest: Optional[Callable[[bytes, bytes], bytes]] = None):
-        assert page_size >= 1, page_size
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.page_size = page_size
         self._digest = digest or _blake_chain
         self._entries: Dict[bytes, _Entry] = {}
         self._clock = 0               # monotonic touch counter (LRU)
         self.n_evicted = 0
         self.n_rejected = 0           # hash hits rejected by block compare
+        self.n_invalidated = 0        # entries dropped by invalidate()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -166,6 +168,41 @@ class PrefixCache:
                     key = self._entries[key].parent
         return sum(1 for k, e in self._entries.items()
                    if k not in pinned and pool.refcount(e.page) == 1)
+
+    def invalidate(self, pages: List[int], pool: PagePool) -> int:
+        """Drop every entry whose page is in ``pages`` — plus ALL its
+        descendants — and release the index's reference on each dropped
+        page. The quarantine hook (ISSUE 10): when a slot faults
+        (non-finite guard trip), every page it WROTE since admission is
+        suspect, and so is every chain entry hanging below one — a chain
+        key commits to the tokens, not the content, so a poisoned page
+        would keep serving sharers forever if the entry survived.
+
+        Pages a live sharer still holds stay allocated (the decref only
+        removes the index's claim) — their content is safe for THOSE
+        sharers because copy-on-write means a sharer never writes a page
+        it shares; invalidation only stops NEW requests from matching
+        entries whose content a faulting slot produced. Returns the
+        number of entries dropped."""
+        suspect = set(pages)
+        doomed = {k for k, e in self._entries.items() if e.page in suspect}
+        # descendants: an entry is reachable only through its parent, so
+        # anything below a doomed entry must go too (and would otherwise
+        # leak its index reference forever)
+        changed = True
+        while changed:
+            changed = False
+            for k, e in self._entries.items():
+                if k not in doomed and e.parent in doomed:
+                    doomed.add(k)
+                    changed = True
+        for k in doomed:
+            entry = self._entries.pop(k)
+            if entry.parent != _ROOT and entry.parent in self._entries:
+                self._entries[entry.parent].children -= 1
+            pool.free([entry.page])
+        self.n_invalidated += len(doomed)
+        return len(doomed)
 
     def evict(self, pool: PagePool, need: int) -> int:
         """Drop least-recently-used LEAF entries whose page has no holder

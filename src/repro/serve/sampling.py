@@ -16,7 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SamplingParams", "sample_tokens"]
+__all__ = ["SamplingParams", "sample_tokens", "sample_tokens_guarded"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,3 +63,17 @@ def sample_tokens(logits, temps, top_ks, keys, vocab: int):
     sampled = jax.vmap(jax.random.categorical)(use, scaled)
     tok = jnp.where(temps > 0.0, sampled, greedy)
     return tok.astype(jnp.int32), carry
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def sample_tokens_guarded(logits, temps, top_ks, keys, vocab: int):
+    """``sample_tokens`` plus the per-slot RAW-logit row maximum, fused
+    into one dispatch. The row max is the non-finite guard's reduction
+    (-inf entries are legitimate — masking, top-k — but the max is finite
+    for any sane row and poisoned by any NaN); fusing it here instead of
+    issuing a second ``jnp.max`` call keeps the guarded decode path at
+    one device round-trip per step, which is what holds the guard's cost
+    under the benchmark gate's 5% budget."""
+    peak = jnp.max(logits.astype(jnp.float32), axis=-1)
+    tok, carry = sample_tokens(logits, temps, top_ks, keys, vocab)
+    return tok, carry, peak

@@ -34,10 +34,11 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.lifecycle import AdmissionRejected
 from repro.serve.sampling import SamplingParams
 
 __all__ = ["Request", "ChunkPlan", "FIFOScheduler"]
@@ -79,12 +80,15 @@ class Request:
         arr = np.asarray(self.tokens)
         if np.issubdtype(arr.dtype, np.floating):
             self.tokens = np.asarray(arr, np.float32)
-            assert self.tokens.ndim >= 1 and self.tokens.shape[0] >= 1, \
-                "empty feature payload"
+            if self.tokens.ndim < 1 or self.tokens.shape[0] < 1:
+                raise AdmissionRejected("empty feature payload")
         else:
             self.tokens = np.asarray(arr, np.int32).reshape(-1)
-            assert self.tokens.size >= 1, "empty prompt"
-        assert self.max_new_tokens >= 1, self.max_new_tokens
+            if self.tokens.size < 1:
+                raise AdmissionRejected("empty prompt")
+        if self.max_new_tokens < 1:
+            raise AdmissionRejected(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
 
     @property
     def prompt_len(self) -> int:
@@ -130,7 +134,9 @@ class FIFOScheduler:
     """Admission into freed slots: priority classes, FIFO (or SPF) within."""
 
     def __init__(self, policy: str = "fifo"):
-        assert policy in ("fifo", "spf"), policy
+        if policy not in ("fifo", "spf"):
+            raise ValueError(f"scheduler policy must be 'fifo' or 'spf', "
+                             f"got {policy!r}")
         self.policy = policy
         self._front: Deque[Request] = deque()   # preempted, resume first
         self._queue: Deque[Request] = deque()   # arrivals
@@ -172,6 +178,35 @@ class FIFOScheduler:
             return self._front[0]
         i = self._pick()
         return None if i == -1 else self._queue[i]
+
+    def remove(self, rid: int) -> Optional[Request]:
+        """Drop the queued request with id ``rid`` (front or arrival
+        queue). Returns the removed request, or None when ``rid`` is not
+        queued — cancellation and deadline expiry of requests that never
+        reached a slot (ISSUE 10)."""
+        for q in (self._front, self._queue):
+            for i, r in enumerate(q):
+                if r.rid == rid:
+                    del q[i]
+                    return r
+        return None
+
+    def queued(self) -> List[Request]:
+        """Every queued request, front queue first (inspection only —
+        deadline sweeps and engine checkpoints walk this without
+        popping)."""
+        return list(self._front) + list(self._queue)
+
+    def snapshot(self) -> Tuple[List[Request], List[Request]]:
+        """(front, arrivals) in queue order — the engine checkpoint
+        serializes these; ``restore`` rebuilds the exact state."""
+        return list(self._front), list(self._queue)
+
+    def restore(self, front: List[Request],
+                arrivals: List[Request]) -> None:
+        """Replace the queue state with a ``snapshot``'s content."""
+        self._front = deque(front)
+        self._queue = deque(arrivals)
 
     def take(self, n: int) -> List[Request]:
         """Pop up to ``n`` requests in policy order (front queue first)."""

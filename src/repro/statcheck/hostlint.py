@@ -9,11 +9,16 @@ reads it back); a ``block_until_ready`` in the engine loop serializes the
 pipelined decode steps the engine exists to overlap. These are one-line
 mistakes that survive every unit test.
 
-Three rules, suppressible per line with ``# statcheck: allow(<rule>)``:
+Four rules, suppressible per line with ``# statcheck: allow(<rule>)``:
 
 - ``host-jnp`` — ``jax``/``jax.numpy`` usage in host-side modules
   (``serve/pages.py``, ``serve/scheduler.py``, ``serve/engine.py``).
   Sharding moves cache bytes, never allocator arithmetic.
+- ``host-assert`` — bare ``assert`` statements in host-side serve
+  modules (ISSUE 10): a load-bearing assert vanishes under
+  ``python -O``, turning an accounting violation into silent state
+  corruption. Failures must be TYPED (``serve/lifecycle.py``) so the
+  engine can contain them.
 - ``host-sync`` — ``.block_until_ready()`` anywhere in ``serve/``
   (the engine must stay dispatch-only; benchmarks time, engines don't),
   and ``np.asarray``/``jax.device_get`` applied to device state
@@ -45,6 +50,8 @@ HOST_MODULES = (
     os.path.join("src", "repro", "serve", "prefix.py"),
     os.path.join("src", "repro", "serve", "scheduler.py"),
     os.path.join("src", "repro", "serve", "engine.py"),
+    os.path.join("src", "repro", "serve", "lifecycle.py"),
+    os.path.join("src", "repro", "serve", "faults.py"),
 )
 # modules where the host-sync rules apply (device code allowed)
 SERVE_MODULES = (
@@ -134,6 +141,24 @@ def _check_host_jnp(tree: ast.Module, path: str,
                     f"host-side module uses jax-bound name "
                     f"'{node.id}' — a device dispatch in bookkeeping "
                     "code"))
+    return findings
+
+
+def _check_host_assert(tree: ast.Module, path: str,
+                       lines: List[str]) -> List[LintFinding]:
+    """Bare ``assert`` in host serve modules: gone under ``python -O``,
+    so an invariant breach (double free, dead request, bad config) would
+    corrupt state silently instead of raising a typed, containable
+    error."""
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert) \
+                and not _suppressed(lines, node.lineno, "host-assert"):
+            findings.append(LintFinding(
+                "host-assert", path, node.lineno,
+                "bare assert in host serve code — raise a typed "
+                "serve.lifecycle error instead (asserts vanish under "
+                "python -O)"))
     return findings
 
 
@@ -251,6 +276,7 @@ def lint_file(path: str, *, host: bool = False, serve: bool = False,
     findings: List[LintFinding] = []
     if host:
         findings += _check_host_jnp(tree, path, lines)
+        findings += _check_host_assert(tree, path, lines)
     if serve:
         findings += _check_host_sync(tree, path, lines)
     if kernel:

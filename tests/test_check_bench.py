@@ -30,7 +30,7 @@ def _healthy_kernels(speedup=1.0):
 
 
 def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0,
-                   chunked_ratio=2.4, prefix_ratio=3.2):
+                   chunked_ratio=2.4, prefix_ratio=3.2, guard_ratio=1.0):
     return {
         "points": [
             {"occupancy": 1, "decode_tokens_per_s": decode / 2,
@@ -48,6 +48,9 @@ def _healthy_serve(decode=2000.0, ratio=1.0, layout_ratio=1.0,
                            "page_size": 64, "hit_rate": 0.98,
                            "outputs_identical": True,
                            "ratio": prefix_ratio},
+        "guard_overhead": {"occupancy": 4, "page_size": 16,
+                           "outputs_identical": True,
+                           "ratio": guard_ratio},
     }
 
 
@@ -150,6 +153,19 @@ def test_regressed_prefix_sharing_ratio_fails(files):
     assert _run(bdir, kernels, bad) == 1
     assert _run(bdir, kernels, bad, "--tolerance", "0.90") == 1
     healthy = _write(tmp / "ok_pf.json", _healthy_serve(prefix_ratio=2.2))
+    assert _run(bdir, kernels, healthy) == 0
+
+
+def test_regressed_guard_overhead_ratio_fails(files):
+    """ISSUE 10 gate: NaN/Inf guards costing more than 5% of decode
+    throughput (guarded/unguarded ratio < 0.95) must fail CI. Structural
+    floor (0.95, fixed), NOT tolerance-scaled — widening --tolerance
+    must not save it."""
+    tmp, bdir, kernels, _ = files
+    bad = _write(tmp / "bad_g.json", _healthy_serve(guard_ratio=0.90))
+    assert _run(bdir, kernels, bad) == 1
+    assert _run(bdir, kernels, bad, "--tolerance", "0.90") == 1
+    healthy = _write(tmp / "ok_g.json", _healthy_serve(guard_ratio=0.96))
     assert _run(bdir, kernels, healthy) == 0
 
 

@@ -16,6 +16,7 @@ from repro.configs import smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
 from repro.serve import FIFOScheduler, PagePool, Request, SamplingParams, ServeEngine
+from repro.serve.lifecycle import AdmissionRejected
 
 
 def _model(arch):
@@ -277,9 +278,9 @@ def test_submit_errors_state_their_actual_bound():
     cfg, model, params = _model("stablelm_12b")
     long_prompt = _prompts(cfg, (40,), seed=4)[0]
     eng_c = ServeEngine(model, params, max_len=48, n_slots=2)
-    with pytest.raises(AssertionError, match=r"contiguous mode.*max_len=48"):
+    with pytest.raises(AdmissionRejected, match=r"contiguous mode.*max_len=48"):
         eng_c.submit(long_prompt, 40)
     eng_p = ServeEngine(model, params, max_len=48, n_slots=2, page_size=16,
                         n_pages=8)
-    with pytest.raises(AssertionError, match=r"paged mode.*page-table"):
+    with pytest.raises(AdmissionRejected, match=r"paged mode.*page-table"):
         eng_p.submit(_prompts(cfg, (100,), seed=5)[0], 100)

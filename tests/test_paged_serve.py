@@ -11,6 +11,7 @@ from repro.configs import smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
 from repro.serve import PagePool, ServeEngine
+from repro.serve.lifecycle import AdmissionRejected, PoolError
 
 PF = 12
 
@@ -72,7 +73,7 @@ class TestPagePool:
         pool = PagePool(4, 8)
         a = pool.alloc(2)
         pool.free(a)
-        with pytest.raises(AssertionError):
+        with pytest.raises(PoolError):
             pool.free(a)
 
     def test_pages_needed(self):
@@ -147,7 +148,7 @@ def test_paged_accepts_request_beyond_max_len():
     cfg, model, params = _model("stablelm_12b")
     prompt = _prompts(cfg, (40,), seed=4)[0]
     eng_c = ServeEngine(model, params, max_len=48, n_slots=2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(AdmissionRejected):
         eng_c.submit(prompt, 40)                  # 40 + 40 > 48
     eng_p = ServeEngine(model, params, max_len=48, n_slots=2, page_size=16,
                         n_pages=8)
@@ -157,7 +158,7 @@ def test_paged_accepts_request_beyond_max_len():
     assert eng_p._pool.n_free == eng_p.n_pages
 
     # a request that can NEVER fit its page-table row is rejected up front
-    with pytest.raises(AssertionError):
+    with pytest.raises(AdmissionRejected):
         eng_p.submit(_prompts(cfg, (100,), seed=5)[0], 100)
 
 

@@ -21,6 +21,7 @@ from repro.models import get_model
 from repro.models import pairformer as pf_mod
 from repro.models.common import init_params, stack_layers
 from repro.serve import FIFOScheduler, PairBatchBackend, Request, ServeEngine
+from repro.serve.lifecycle import AdmissionRejected
 
 MAX_LEN = 16      # pinned residue padding: results must not depend on wave
                   # composition, so the one wave-dependent shape is fixed
@@ -144,11 +145,11 @@ def test_factor_mlp_cache_serves_batched():
 def test_pair_request_validation():
     _, model, params = _model()
     eng = ServeEngine(model, params, max_len=MAX_LEN, n_slots=2)
-    with pytest.raises(AssertionError):              # int prompt payload
+    with pytest.raises(AdmissionRejected):           # int prompt payload
         eng.submit(np.arange(5, dtype=np.int32), 3)
-    with pytest.raises(AssertionError):              # exceeds max_len
+    with pytest.raises(AdmissionRejected):           # exceeds max_len
         eng.submit(np.zeros((MAX_LEN + 1, 64), np.float32), 3)
-    with pytest.raises(AssertionError):              # token-emitting API
+    with pytest.raises(TypeError):                   # token-emitting API
         eng.generate([np.zeros((4, 64), np.float32)], 3)
     assert isinstance(eng.backend, PairBatchBackend)
 

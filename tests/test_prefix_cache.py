@@ -30,6 +30,7 @@ from repro.configs import smoke_config
 from repro.models import get_model
 from repro.models.common import init_params
 from repro.serve import PrefixCache, SamplingParams, ServeEngine
+from repro.serve.lifecycle import AdmissionRejected, PoolError
 from repro.serve.pages import PagePool
 
 
@@ -79,13 +80,13 @@ def test_pool_double_free_rejected():
     pool = PagePool(2, page_size=4)
     (p,) = pool.alloc(1)
     pool.free([p])
-    with pytest.raises(AssertionError, match="double free"):
+    with pytest.raises(PoolError, match="double free"):
         pool.free([p])
 
 
 def test_pool_incref_of_free_page_rejected():
     pool = PagePool(2, page_size=4)
-    with pytest.raises(AssertionError, match="incref of free"):
+    with pytest.raises(PoolError, match="incref of free"):
         pool.incref([0])
 
 
@@ -254,7 +255,7 @@ def test_submit_error_accounts_for_shared_hits():
     eng.run()
     over = np.concatenate([head, rng.randint(
         0, cfg.vocab, (68,)).astype(np.int32)])
-    with pytest.raises(AssertionError,
+    with pytest.raises(AdmissionRejected,
                        match=r"paged mode.*shared via the prefix cache"
                              r".*page-table"):
         eng.submit(over, 100)

@@ -189,6 +189,42 @@ class TestHostJnp:
         assert found == []
 
 
+class TestHostAssert:
+    def test_flags_bare_assert(self, tmp_path):
+        found = _lint_src(tmp_path, """
+            def free(pages, refs):
+                assert refs[pages[0]] > 0, "double free"
+                refs[pages[0]] -= 1
+            """, host=True)
+        assert [f.rule for f in found] == ["host-assert"]
+        assert "python -O" in found[0].message
+
+    def test_suppression_comment(self, tmp_path):
+        found = _lint_src(tmp_path, """
+            def free(pages, refs):
+                assert refs[pages[0]] > 0  # statcheck: allow(host-assert)
+            """, host=True)
+        assert found == []
+
+    def test_typed_raise_is_fine(self, tmp_path):
+        found = _lint_src(tmp_path, """
+            def free(pages, refs):
+                if refs[pages[0]] <= 0:
+                    raise PoolError("double free")
+            """, host=True)
+        assert found == []
+
+    def test_serve_only_module_exempt(self, tmp_path):
+        # backend/sampling are serve (device code allowed) but not HOST:
+        # jitted-side asserts there are trace-time shape checks, not
+        # runtime accounting
+        found = _lint_src(tmp_path, """
+            def validate(x):
+                assert x.ndim == 2
+            """, serve=True)
+        assert found == []
+
+
 class TestHostSync:
     def test_flags_block_until_ready(self, tmp_path):
         found = _lint_src(tmp_path, """
